@@ -1,0 +1,31 @@
+"""Paper Fig. 4: ADRA CiM vs near-memory baseline, current-based sensing.
+
+(a) energy components per op; (b) energy decrease vs array size;
+(c) speedup vs array size. Anchors @1024^2: 1.94x, -41.18% E, -69.04% EDP.
+"""
+from repro.core import energy
+
+
+def rows():
+    out = []
+    r1024 = energy.current_sensing(1024)
+    for comp, val in r1024.read.breakdown.items():
+        out.append(("fig4a_read_component", comp, energy.to_fj(val), ""))
+    for comp, val in r1024.cim.breakdown.items():
+        out.append(("fig4a_cim_component", comp, energy.to_fj(val), ""))
+    for size, r in energy.sweep("current").items():
+        out.append(("fig4b_energy_decrease_pct", size, r.energy_decrease_pct,
+                    "paper@1024: 41.18"))
+        out.append(("fig4c_speedup", size, r.speedup, "paper@1024: 1.94"))
+        out.append(("fig4_edp_decrease_pct", size, r.edp_decrease_pct,
+                    "paper@1024: 69.04"))
+    return out
+
+
+def main():
+    for name, key, val, note in rows():
+        print(f"{name},{key},{val:.4f},{note}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Fig. 5: precharged (scheme 1) vs charge-per-op (scheme 2) voltage
+sensing. (a) energy vs CiM op frequency — crossover at 7.53 MHz;
+(b) energy vs CiM parallelism P — crossover at ~42%."""
+import numpy as np
+
+from repro.core import energy
+
+
+def rows():
+    out = []
+    for f_mhz in (1, 2, 4, 7.53, 10, 20, 50):
+        e = energy.scheme_energies_vs_frequency(f_mhz * 1e6)
+        out.append(("fig5a_energy_vs_freq", f"{f_mhz}MHz",
+                    e["scheme1"], e["scheme2"]))
+    out.append(("fig5a_crossover_mhz", "-", energy.frequency_crossover_hz() / 1e6,
+                "paper: 7.53"))
+    for p in (0.1, 0.25, 0.42, 0.5, 0.75, 1.0):
+        e = energy.scheme_energies_vs_parallelism(p)
+        out.append(("fig5b_energy_vs_parallelism", f"P={p}",
+                    e["scheme1"], e["scheme2"]))
+    out.append(("fig5b_crossover_P", "-", energy.parallelism_crossover(),
+                "paper: ~0.42"))
+    return out
+
+
+def main():
+    for row in rows():
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Fig. 6: ADRA vs baseline under precharged-RBL voltage sensing
+(scheme 1). Paper: 1.57-1.73x speedup, +20-23% energy, 23.26-28.81% EDP
+decrease; CiM bitline discharges 6*Delta vs 2*Delta for a read (3x energy)."""
+from repro.core import energy
+
+
+def rows():
+    out = []
+    r = energy.voltage_scheme1(1024)
+    for comp, val in r.read.breakdown.items():
+        out.append(("fig6a_read_component", comp, energy.to_fj(val), ""))
+    for comp, val in r.cim.breakdown.items():
+        out.append(("fig6a_cim_component", comp, energy.to_fj(val), ""))
+    out.append(("fig6a_bitline_ratio_cim_over_read", 1024,
+                r.cim.breakdown["bitline"] / r.read.breakdown["bitline"],
+                "paper: 3x (6 Delta vs 2 Delta)"))
+    for size, r in energy.sweep("scheme1").items():
+        out.append(("fig6b_energy_decrease_pct", size, r.energy_decrease_pct,
+                    "paper: -20..-23 (CiM costs more)"))
+        out.append(("fig6c_speedup", size, r.speedup, "paper: 1.57-1.73"))
+        out.append(("fig6_edp_decrease_pct", size, r.edp_decrease_pct,
+                    "paper: 23.26-28.81"))
+    return out
+
+
+def main():
+    for name, key, val, note in rows():
+        print(f"{name},{key},{val:.4f},{note}")
+
+
+if __name__ == "__main__":
+    main()

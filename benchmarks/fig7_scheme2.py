@@ -1,0 +1,29 @@
+"""Paper Fig. 7: ADRA vs baseline under charge-per-op voltage sensing
+(scheme 2). Paper: 1.945-1.983x speedup, 35.5-45.8% less energy,
+66.83-72.6% EDP decrease."""
+from repro.core import energy
+
+
+def rows():
+    out = []
+    r = energy.voltage_scheme2(1024)
+    for comp, val in r.read.breakdown.items():
+        out.append(("fig7a_read_component", comp, energy.to_fj(val), ""))
+    for comp, val in r.cim.breakdown.items():
+        out.append(("fig7a_cim_component", comp, energy.to_fj(val), ""))
+    for size, r in energy.sweep("scheme2").items():
+        out.append(("fig7b_energy_decrease_pct", size, r.energy_decrease_pct,
+                    "paper: 35.5-45.8"))
+        out.append(("fig7c_speedup", size, r.speedup, "paper: 1.945-1.983"))
+        out.append(("fig7_edp_decrease_pct", size, r.edp_decrease_pct,
+                    "paper: 66.83-72.6"))
+    return out
+
+
+def main():
+    for name, key, val, note in rows():
+        print(f"{name},{key},{val:.4f},{note}")
+
+
+if __name__ == "__main__":
+    main()

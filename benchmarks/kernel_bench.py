@@ -1,0 +1,59 @@
+"""ADRA bit-plane kernel benchmark: fused single-pass vs per-function
+baseline passes — the TPU translation of the paper's one-vs-two memory
+access argument.
+
+Reports (a) the HBM traffic model for TPU-scale tensors, (b) measured
+wall-time of the jnp oracle paths on THIS host (CPU; interpret-mode Pallas
+is not a performance proxy), and (c) the projected ADRA-array EDP for the
+same op counts from the calibrated paper model.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy
+from repro.core.bitplane import pack_bitplanes
+from repro.kernels import ref
+from repro.kernels.adra_bitplane import traffic_model_bytes
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main():
+    n_bits, n_words = 16, 1 << 20
+    rng = np.random.RandomState(0)
+    a = jnp.array(rng.randint(-2**15, 2**15, n_words), jnp.int32)
+    b = jnp.array(rng.randint(-2**15, 2**15, n_words), jnp.int32)
+    ap, bp = pack_bitplanes(a, n_bits), pack_bitplanes(b, n_bits)
+
+    # traffic model (the roofline argument)
+    t = traffic_model_bytes(n_bits, ap.shape[1])
+    print(f"kernel_traffic_fused_bytes,{n_words},{t['fused']:.0f},")
+    print(f"kernel_traffic_baseline_bytes,{n_words},{t['baseline']:.0f},")
+    print(f"kernel_traffic_ratio,{n_words},{t['ratio']:.3f},paper: ~2 accesses vs 1")
+
+    # oracle-path wall time on this host (sanity, not TPU perf)
+    fused = jax.jit(lambda x, y: ref.adra_bitplane_ref(x, y, 1))
+    us = _time(fused, ap, bp)
+    print(f"kernel_oracle_fused_us,{n_words},{us:.1f},jnp path on CPU host")
+
+    # projected ADRA-array energy for the same op count (paper model)
+    ops32 = n_words * n_bits / 32
+    r = energy.current_sensing(1024)
+    saved = (r.baseline.energy - r.cim.energy) * ops32
+    print(f"kernel_projected_adra_energy_saved_fj,{n_words},{energy.to_fj(saved):.0f},"
+          f"current sensing @1024^2")
+    print(f"kernel_projected_edp_decrease_pct,{n_words},{r.edp_decrease_pct:.2f},")
+
+
+if __name__ == "__main__":
+    main()

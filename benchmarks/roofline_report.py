@@ -1,0 +1,43 @@
+"""Roofline report: renders the dry-run JSON artifacts into the
+EXPERIMENTS.md table (all (arch x shape x mesh) cells)."""
+import glob
+import json
+import os
+
+OUT_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(mesh_filter=None):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
+        d = json.load(open(f))
+        if mesh_filter and mesh_filter not in f:
+            continue
+        cells.append(d)
+    return cells
+
+
+def main():
+    cells = load_cells()
+    if not cells:
+        print("no dry-run artifacts found; run: python -m repro.launch.sweep")
+        return
+    print("arch,shape,mesh,status,t_compute_s,t_memory_s,t_collective_s,"
+          "bottleneck,model_flops,useful_ratio,roofline_fraction")
+    for d in cells:
+        if "skipped" in d:
+            print(f"{d['arch']},{d['shape']},{d.get('mesh','-')},skipped(N/A),,,,,,,")
+            continue
+        if d.get("status") != "ok":
+            print(f"{d['arch']},{d['shape']},{d.get('mesh','-')},ERROR,,,,,,,")
+            continue
+        r = d["roofline"]
+        print(f"{d['arch']},{d['shape']},{d['mesh']},ok,"
+              f"{r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+              f"{r['t_collective_s']:.3e},{r['bottleneck']},"
+              f"{r['model_flops']:.3e},{r['useful_flops_ratio']:.3f},"
+              f"{r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark harness: one module per paper table/figure + the TPU kernel
+traffic bench + the roofline report. Prints ``name,key,value,note`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig4|fig5|fig6|fig7|kernel|roofline]
+"""
+import argparse
+import sys
+
+from . import (
+    fig4_current_sensing,
+    fig5_voltage_tradeoffs,
+    fig6_scheme1,
+    fig7_scheme2,
+    kernel_bench,
+    roofline_report,
+)
+
+SECTIONS = {
+    "fig4": fig4_current_sensing.main,
+    "fig5": fig5_voltage_tradeoffs.main,
+    "fig6": fig6_scheme1.main,
+    "fig7": fig7_scheme2.main,
+    "kernel": kernel_bench.main,
+    "roofline": roofline_report.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(SECTIONS), default=None)
+    args = ap.parse_args()
+    chosen = [args.only] if args.only else list(SECTIONS)
+    for name in chosen:
+        print(f"# --- {name} " + "-" * 50)
+        SECTIONS[name]()
+
+
+if __name__ == '__main__':
+    main()

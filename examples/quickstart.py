@@ -1,0 +1,52 @@
+"""Quickstart: the ADRA CiM primitive + a tiny LM training run.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import cim_add, cim_boolean, cim_compare, cim_sub, edp_summary
+from repro.models import build
+from repro.optim import AdamWConfig
+from repro.train import init_state, make_train_step
+
+
+def adra_primitives():
+    print("== ADRA single-access in-memory arithmetic ==")
+    a = jnp.array([12, -7, 100, 3], jnp.int32)
+    b = jnp.array([5, -7, 120, -3], jnp.int32)
+    print("a      :", a)
+    print("b      :", b)
+    print("a - b  :", cim_sub(a, b, n_bits=8).value, " (single memory access)")
+    print("a + b  :", cim_add(a, b, n_bits=8).value)
+    c = cim_compare(a, b, n_bits=8)
+    print("a <=> b: lt", c.lt, " eq", c.eq, " gt", c.gt)
+    print("a XOR b:", cim_boolean(a & 0xF, b & 0xF, "xor", n_bits=4))
+    print("\npaper-model EDP decrease per sensing scheme:")
+    for scheme, row in edp_summary().items():
+        print(f"  {scheme:8s}: speedup {row['speedup']:.2f}x, "
+              f"energy {row['energy_decrease_pct']:+.1f}%, "
+              f"EDP -{row['edp_decrease_pct']:.1f}%")
+
+
+def tiny_training():
+    print("\n== 20 training steps of a reduced llama3.2 on CPU ==")
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build(cfg)
+    opt = AdamWConfig(lr=3e-3)
+    state = init_state(model, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(model, opt))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab_size),
+        "targets": jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0, cfg.vocab_size),
+    }
+    for i in range(20):
+        state, m = step(state, batch)
+        if i % 5 == 0 or i == 19:
+            print(f"  step {i:2d}  loss {float(m['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    adra_primitives()
+    tiny_training()

@@ -1,0 +1,47 @@
+"""Batched serving with the ADRA quantized-comparison sampler.
+
+Runs prefill + decode on a reduced gemma-2b, sampling each token two ways —
+float argmax and the ADRA in-memory comparison tree — and checks they agree.
+
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build
+from repro.train import adra_sample, greedy_sample, make_decode_step, make_prefill_step
+
+cfg = get_config("gemma-2b").reduced()
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+B, P, G = 4, 16, 12
+prefill = jax.jit(make_prefill_step(model, max_len=P + G))
+decode = jax.jit(make_decode_step(model))
+
+prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab_size)
+caches, logits = prefill(params, {"tokens": prompts})
+
+agree = 0
+tok = greedy_sample(logits)
+generated = [tok]
+t0 = time.monotonic()
+for t in range(P, P + G - 1):
+    caches, logits = decode(params, caches,
+                            {"tokens": tok[:, None],
+                             "positions": jnp.full((B,), t, jnp.int32)})
+    tok_f = greedy_sample(logits)
+    tok_a = adra_sample(logits, n_bits=8)
+    agree += int(jnp.sum(tok_f == tok_a))
+    tok = tok_f
+    generated.append(tok)
+dt = time.monotonic() - t0
+
+gen = np.array(jnp.stack(generated, 1))
+print(f"generated {gen.shape[1]} tokens x {B} sequences in {dt:.2f}s")
+print(f"ADRA sampler vs float argmax agreement: {agree}/{B * (G - 1)}")
+print("sequences:\n", gen)

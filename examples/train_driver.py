@@ -1,0 +1,25 @@
+"""End-to-end training driver example: a ~100M-parameter llama-family model
+for a few hundred steps under the fault-tolerant Supervisor (async
+checkpointing, NaN sentinel, restart-exact data).
+
+  PYTHONPATH=src python examples/train_driver.py            # quick (reduced)
+  PYTHONPATH=src python examples/train_driver.py --full100m # ~100M, 200 steps
+
+This is a thin veneer over the production launcher:
+  python -m repro.launch.train --arch llama3.2-1b --preset 100m --steps 200
+"""
+import sys
+
+from repro.launch import train as train_launcher
+
+if __name__ == "__main__":
+    if "--full100m" in sys.argv:
+        argv = ["--arch", "llama3.2-1b", "--preset", "100m",
+                "--steps", "200", "--batch", "8", "--seq", "256",
+                "--ckpt-every", "50"]
+    else:
+        argv = ["--arch", "llama3.2-1b", "--preset", "reduced",
+                "--steps", "60", "--batch", "8", "--seq", "128",
+                "--ckpt-every", "20"]
+    sys.argv = [sys.argv[0]] + argv
+    train_launcher.main()

@@ -1,0 +1,10 @@
+from .base import (  # noqa: F401
+    ArchConfig,
+    MLAConfig,
+    MoEConfig,
+    SHAPES,
+    ShapeSpec,
+    input_specs,
+    shape_applicable,
+)
+from .registry import ARCH_IDS, get_config  # noqa: F401

@@ -1,0 +1,37 @@
+"""repro.core — the paper's contribution: ADRA digital computing-in-memory.
+
+Layers:
+  fefet          — HZO FeFET device model (Miller's equations)
+  array          — asymmetric dual-row senseline model (the ADRA mechanism)
+  sensing        — 3-SA reference scheme + OAI recovery of A
+  compute_module — gate-level add/sub/compare peripheral (Fig 3d)
+  bitplane       — int <-> bit-plane codecs
+  adra           — composable JAX ops: cim_add / cim_sub / cim_compare /
+                   cim_boolean (analog-validated and boolean fast paths)
+  energy         — calibrated energy/latency/EDP model (Figs 4-7)
+  offload        — HLO-level ADRA offload estimator for compiled programs
+"""
+from .adra import (  # noqa: F401
+    AccessOutputs,
+    ArithOut,
+    CmpOut,
+    adra_access,
+    cim_add,
+    cim_boolean,
+    cim_compare,
+    cim_sub,
+    BOOLEAN_FUNCTIONS,
+)
+from .array import AdraArrayConfig, level_currents, senseline_current  # noqa: F401
+from .compute_module import compare_from_sub, compute_module, ripple_chain  # noqa: F401
+from .energy import (  # noqa: F401
+    current_sensing,
+    edp_summary,
+    frequency_crossover_hz,
+    parallelism_crossover,
+    voltage_scheme1,
+    voltage_scheme2,
+)
+from .fefet import BiasConditions, FeFETParams, FEParams  # noqa: F401
+from .offload import OffloadReport, analyze_hlo  # noqa: F401
+from .sensing import SenseReferences, current_sense_margins, voltage_sense_margins  # noqa: F401

@@ -1,0 +1,65 @@
+"""Bit-plane codecs: integer tensors <-> LSB-first bit-planes / packed planes.
+
+The ADRA array stores an n-bit word as n bits along a row; a CiM access
+operates on ALL columns of a row pair at once. The natural TPU layout for the
+same computation is the transpose: plane p holds bit p of many words, packed
+32 words per uint32 lane element. The codecs here are used by the functional
+ADRA ops (repro.core.adra) and by the Pallas bit-plane kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int_to_bits(x: jax.Array, n_bits: int) -> jax.Array:
+    """Two's-complement LSB-first bit decomposition: [...] -> [..., n_bits]."""
+    x = jnp.asarray(x, dtype=jnp.int32)
+    shifts = jnp.arange(n_bits, dtype=jnp.int32)
+    shifted = x[..., None] >> shifts  # jnp broadcasts; arithmetic shift is fine pre-mask
+    return (shifted & 1).astype(jnp.int32)
+
+
+def bits_to_int(bits: jax.Array, signed: bool = True) -> jax.Array:
+    """Inverse of int_to_bits; interprets the MSB as a sign bit if signed.
+
+    Accumulates modulo 2^32 (int32 wrap semantics). Exact for words of up to
+    31 value bits (signed) / 32 bits (wrapped); wider chains — e.g. the
+    (n+1)-bit output of a 32-bit subtraction — are exact iff the result fits,
+    otherwise use the raw bit pattern.
+    """
+    n = bits.shape[-1]
+    k = min(n, 32)
+    w = jnp.left_shift(jnp.uint32(1), jnp.arange(k, dtype=jnp.uint32))
+    val = jnp.sum(bits[..., :k].astype(jnp.uint32) * w, axis=-1, dtype=jnp.uint32)
+    val = val.astype(jnp.int32)
+    if signed and n < 32:
+        sign = bits[..., -1].astype(jnp.int32)
+        # subtract 2^n per sign bit: two's complement sign extension.
+        # (for n == 32 the int32 wrap already encodes the sign.)
+        val = val - jnp.left_shift(sign, jnp.int32(min(n, 31)))
+    return val
+
+
+def pack_bitplanes(x: jax.Array, n_bits: int) -> jax.Array:
+    """[words] int32 -> [n_bits, ceil(words/32)] uint32 packed planes.
+
+    Plane p, lane word w, bit position j holds bit p of element 32*w + j.
+    """
+    x = jnp.asarray(x, dtype=jnp.int32).reshape(-1)
+    n = x.shape[0]
+    pad = (-n) % 32
+    x = jnp.pad(x, (0, pad))
+    bits = int_to_bits(x, n_bits)                        # [N, n_bits]
+    bits = bits.T.reshape(n_bits, -1, 32)                # [n_bits, N/32, 32]
+    weights = (1 << jnp.arange(32, dtype=jnp.uint32)).astype(jnp.uint32)
+    return jnp.sum(bits.astype(jnp.uint32) * weights, axis=-1)
+
+
+def unpack_bitplanes(planes: jax.Array, n_words: int, signed: bool = True) -> jax.Array:
+    """[n_bits, W] uint32 packed planes -> [n_words] int (two's complement)."""
+    n_bits, w = planes.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (planes[..., None] >> shifts) & jnp.uint32(1)  # [n_bits, W, 32]
+    bits = bits.reshape(n_bits, w * 32).T.astype(jnp.int32)  # [N, n_bits]
+    return bits_to_int(bits[:n_words], signed=signed)

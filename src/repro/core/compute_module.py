@@ -1,0 +1,184 @@
+"""The ADRA peripheral compute module (paper Fig. 3(d) and Sec. III-B).
+
+Inputs per bit position: the three SA outputs OR=A+B, AND=AB, B (and their
+complements, free from the differential SAs), a ripple carry C_IN, and a
+global SELECT line (0 = addition, 1 = subtraction).
+
+Derived signals (gate identities used by the module):
+    XOR  = A ^ B      = OR * NOT(AND)
+    XNOR = NOT(XOR)   = AND + NOR
+    A*NOT(B)          = OR * NOT(B)          (needed for A - B)
+
+Addition     (operands A, B):        SUM = XOR ^ Cin,  COUT = AND + Cin*XOR
+Subtraction  (operands A, NOT(B)):   SUM = XNOR ^ Cin, COUT = A*NOT(B) + Cin*XNOR
+with C_IN(0) = SELECT (two's complement: A - B = A + NOT(B) + 1).
+
+An n-bit operation uses n+1 modules; the (n+1)-th handles overflow with
+sign-extended inputs (paper Sec. III-B). Comparison comes for free from the
+subtraction output: the MSB (sign) of the (n+1)-bit result gives A<B, and a
+near-memory AND tree over the complemented SUM bits detects A==B.
+
+Everything operates on integer 0/1 arrays of any shape (vectorized across
+columns/words exactly like the physical array computes all columns at once).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ModuleOut(NamedTuple):
+    sum_: jax.Array
+    carry: jax.Array
+
+
+def compute_module(
+    or_: jax.Array,
+    and_: jax.Array,
+    b: jax.Array,
+    c_in: jax.Array,
+    select: jax.Array,
+) -> ModuleOut:
+    """One ADRA compute module (per bit, per column). All args are 0/1 ints.
+
+    select = 0 -> addition, 1 -> subtraction (A - B).
+    """
+    xor = or_ & (1 - and_)
+    xnor = 1 - xor
+    a_not_b = or_ & (1 - b)
+
+    # 2:1 muxes controlled by SELECT (Fig. 3(d))
+    half = jnp.where(select == 1, xnor, xor)          # A ^ B~  vs  A ^ B
+    gen = jnp.where(select == 1, a_not_b, and_)       # A*~B    vs  A*B
+
+    sum_ = half ^ c_in
+    carry = gen | (c_in & half)
+    return ModuleOut(sum_=sum_, carry=carry)
+
+
+def ripple_chain(
+    or_bits: jax.Array,
+    and_bits: jax.Array,
+    b_bits: jax.Array,
+    select: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chain n+1 compute modules over the bit axis (axis -1, LSB first).
+
+    Inputs are the per-bit SA outputs of an n-bit word pair, shape [..., n].
+    Returns (sum_bits [..., n+1], carry_out [...]). The (n+1)-th module uses
+    sign-extended inputs (bit n-1 replicated), handling two's-complement
+    overflow exactly as the paper prescribes.
+    """
+    n = or_bits.shape[-1]
+    sel = jnp.asarray(select, dtype=or_bits.dtype)
+
+    # sign extension for the overflow module: replicate MSB inputs
+    ext = lambda x: jnp.concatenate([x, x[..., -1:]], axis=-1)
+    or_e, and_e, b_e = ext(or_bits), ext(and_bits), ext(b_bits)
+
+    def step(c_in, xs):
+        o, a, bb = xs
+        out = compute_module(o, a, bb, c_in, sel)
+        return out.carry, out.sum_
+
+    # scan over bit positions (the ripple is sequential in hardware too)
+    xs = (
+        jnp.moveaxis(or_e, -1, 0),
+        jnp.moveaxis(and_e, -1, 0),
+        jnp.moveaxis(b_e, -1, 0),
+    )
+    c0 = jnp.broadcast_to(sel, or_bits.shape[:-1]).astype(or_bits.dtype)
+    c_out, sums = jax.lax.scan(step, c0, xs)
+    return jnp.moveaxis(sums, 0, -1), c_out
+
+
+class CompareOut(NamedTuple):
+    lt: jax.Array   # A < B   (sign bit of the (n+1)-bit A-B)
+    eq: jax.Array   # A == B  (AND tree over complemented SUM bits)
+    gt: jax.Array   # derived: NOT(lt) AND NOT(eq)
+
+
+def and_tree_zero_detect(sum_bits: jax.Array) -> jax.Array:
+    """Near-memory AND-gate tree: 1 iff every SUM bit is 0 (n-1 two-input
+    AND gates for an n-bit word -> one gate per memory column of overhead)."""
+    return jnp.min(1 - sum_bits, axis=-1)
+
+
+def compare_from_sub(sum_bits: jax.Array) -> CompareOut:
+    """Comparison from the subtraction output (paper Sec. III-B)."""
+    lt = sum_bits[..., -1]                      # sign of A - B in 2's complement
+    eq = and_tree_zero_detect(sum_bits)
+    gt = (1 - lt) & (1 - eq)
+    return CompareOut(lt=lt, eq=eq, gt=gt)
+
+
+# ------------------------------------------------------------------
+# Gate-count accounting (used by the energy model's peripheral terms)
+# ------------------------------------------------------------------
+
+#: extra transistors vs the prior-work adder-only module (paper Sec. III-B):
+#: two 2:1 muxes + one NOT + one NOR. The alternate design trades the muxes
+#: for a duplicated XOR + AOI21 (4 extra transistors, same-cycle add AND sub).
+EXTRA_GATES_MUX_DESIGN = {"mux2": 2, "not": 1, "nor": 1}
+EXTRA_TRANSISTORS_MUX_DESIGN = 2 * 6 + 2 + 4            # ~20
+EXTRA_TRANSISTORS_DUAL_OUTPUT_DESIGN = EXTRA_TRANSISTORS_MUX_DESIGN + 4
+
+
+# ------------------------------------------------------------------
+# Alternate compute-module design (paper Sec. III-B, last paragraph):
+# instead of the two 2:1 muxes, duplicate the XOR and AOI21 gates to
+# produce the ADDITION and SUBTRACTION outputs in the SAME cycle
+# (4 extra transistors vs the mux design).
+# ------------------------------------------------------------------
+
+
+class DualModuleOut(NamedTuple):
+    sum_add: jax.Array
+    carry_add: jax.Array
+    sum_sub: jax.Array
+    carry_sub: jax.Array
+
+
+def compute_module_dual(
+    or_: jax.Array,
+    and_: jax.Array,
+    b: jax.Array,
+    c_in_add: jax.Array,
+    c_in_sub: jax.Array,
+) -> DualModuleOut:
+    """One dual-output module: both A+B and A-B bits per cycle."""
+    xor = or_ & (1 - and_)
+    xnor = 1 - xor
+    a_not_b = or_ & (1 - b)
+    return DualModuleOut(
+        sum_add=xor ^ c_in_add,
+        carry_add=and_ | (c_in_add & xor),
+        sum_sub=xnor ^ c_in_sub,
+        carry_sub=a_not_b | (c_in_sub & xnor),
+    )
+
+
+def ripple_chain_dual(
+    or_bits: jax.Array,
+    and_bits: jax.Array,
+    b_bits: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """n+1 dual modules: (sum_add_bits [...,n+1], sum_sub_bits [...,n+1])
+    from ONE memory access — the same-cycle add+sub capability."""
+    ext = lambda x: jnp.concatenate([x, x[..., -1:]], axis=-1)
+    or_e, and_e, b_e = ext(or_bits), ext(and_bits), ext(b_bits)
+
+    def step(carries, xs):
+        ca, cs = carries
+        o, a, bb = xs
+        out = compute_module_dual(o, a, bb, ca, cs)
+        return (out.carry_add, out.carry_sub), (out.sum_add, out.sum_sub)
+
+    xs = (jnp.moveaxis(or_e, -1, 0), jnp.moveaxis(and_e, -1, 0),
+          jnp.moveaxis(b_e, -1, 0))
+    zeros = jnp.zeros(or_bits.shape[:-1], or_bits.dtype)
+    ones = jnp.ones(or_bits.shape[:-1], or_bits.dtype)
+    _, (sa, ss) = jax.lax.scan(step, (zeros, ones), xs)
+    return jnp.moveaxis(sa, 0, -1), jnp.moveaxis(ss, 0, -1)

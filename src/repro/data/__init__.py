@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, embed_stub_batch, iterator, sharded_batch, synthetic_batch  # noqa: F401

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  adra_bitplane   — the paper's technique: single-pass fused bit-plane
+                    add/sub/compare (+ the two-pass near-memory baseline)
+  flash_attention — blocked online-softmax GQA attention (prefill hot spot)
+  rglru           — RG-LRU recurrence with VMEM-resident state
+  slstm           — sLSTM recurrence with VMEM-RESIDENT recurrent weights
+                    (kills the per-step R re-read; EXPERIMENTS §Perf B2)
+
+Each kernel ships an ops.py jit wrapper (backend dispatch) and a ref.py
+pure-jnp oracle; tests sweep shapes/dtypes asserting kernel == oracle in
+interpret mode.
+"""
+from . import ops, ref  # noqa: F401
+from .adra_bitplane import adra_bitplane_op, traffic_model_bytes  # noqa: F401
+from .flash_attention import flash_attention  # noqa: F401
+from .rglru import rglru  # noqa: F401
+from .slstm import slstm_scan  # noqa: F401

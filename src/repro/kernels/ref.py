@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function mirrors one kernel's contract exactly; tests sweep shapes and
+dtypes asserting allclose/equality between kernel (interpret=True on CPU) and
+oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# adra_bitplane oracle
+# ---------------------------------------------------------------------------
+
+
+def adra_bitplane_ref(a_planes: jax.Array, b_planes: jax.Array, select: int):
+    """Oracle for adra_bitplane_op: plane-wise ripple in pure jnp."""
+    n_bits, w = a_planes.shape
+    b_eff = (~b_planes) if select == 1 else b_planes
+    carry = jnp.full((w,), 0xFFFFFFFF if select == 1 else 0, jnp.uint32)
+    sums = []
+    nz = jnp.zeros((w,), jnp.uint32)
+    for i in range(n_bits):
+        a, b = a_planes[i], b_eff[i]
+        half = a ^ b
+        s = half ^ carry
+        carry = (a & b) | (carry & half)
+        sums.append(s)
+        nz = nz | s
+    a_msb, b_msb = a_planes[n_bits - 1], b_eff[n_bits - 1]
+    half = a_msb ^ b_msb
+    s_ext = half ^ carry
+    carry_out = (a_msb & b_msb) | (carry & half)
+    nz = nz | s_ext
+    sums.append(s_ext)
+    sum_p = jnp.stack(sums)
+    return sum_p, carry_out[None, :], s_ext[None, :], (~nz)[None, :]
+
+
+def adra_int_ref(a: jax.Array, b: jax.Array, select: int, n_bits: int):
+    """Integer-semantics oracle: what the bit-plane machinery must equal."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    res = a - b if select == 1 else a + b
+    lt = (a < b).astype(jnp.int32)
+    eq = (a == b).astype(jnp.int32)
+    return res, lt, eq
+
+
+# ---------------------------------------------------------------------------
+# flash attention oracle (GQA-aware, causal or full)
+# ---------------------------------------------------------------------------
+
+
+def mha_ref(
+    q: jax.Array,        # [B, Tq, Hq, D]
+    k: jax.Array,        # [B, Tk, Hkv, D]
+    v: jax.Array,        # [B, Tk, Hkv, D]
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Reference grouped-query attention in f32 accumulation."""
+    b, tq, hq, d = q.shape
+    _, tk, hkv, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to q heads
+    kf = jnp.repeat(kf, group, axis=2)
+    vf = jnp.repeat(vf, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    if causal:
+        mask = jnp.tril(jnp.ones((tq, tk), bool), k=tk - tq)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU oracle (Griffin / RecurrentGemma recurrence)
+# ---------------------------------------------------------------------------
+
+
+def rglru_ref(
+    x: jax.Array,        # [B, T, D] gated input
+    r: jax.Array,        # [B, T, D] recurrence gate pre-activation
+    i: jax.Array,        # [B, T, D] input gate pre-activation
+    log_lambda: jax.Array,  # [D] learnable decay parameter (pre-softplus)
+    h0: jax.Array | None = None,
+    c: float = 8.0,
+) -> tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(log_lambda) * sigmoid(r_t)).  Returns (ys, h_T)."""
+    b, t, d = x.shape
+    decay = jax.nn.softplus(log_lambda.astype(jnp.float32))
+    a = jnp.exp(-c * decay[None, None, :] * jax.nn.sigmoid(r.astype(jnp.float32)))
+    gated = jax.nn.sigmoid(i.astype(jnp.float32)) * x.astype(jnp.float32)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+
+    def step(h, xs):
+        a_t, g_t, m_t = xs
+        h = a_t * h + m_t * g_t
+        return h, h
+
+    h_init = jnp.zeros((b, d), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    from repro.models.scan_utils import chunked_scan, pick_chunk
+
+    h_last, ys = chunked_scan(
+        step, h_init, (a.swapaxes(0, 1), gated.swapaxes(0, 1), mult.swapaxes(0, 1)),
+        chunk=pick_chunk(t),
+    )
+    return ys.swapaxes(0, 1).astype(x.dtype), h_last

@@ -1,0 +1,202 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, embedding tables.
+
+Pure-functional (params are plain pytrees of jnp arrays); initializers take an
+explicit PRNG key. Matmul-bearing layers compute in the config activation
+dtype with f32 accumulation via preferred_element_type.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / jnp.sqrt(jnp.asarray(in_axis_size, jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Interleaved (adjacent-pair) RoPE: x [B, T, H, D], positions [B, T].
+
+    The pair (2i, 2i+1) layout keeps every rotation WITHIN a shard when the
+    head_dim axis is model-sharded (the half-split layout splits the sharded
+    axis and forces SPMD to fully replicate — observed as 'involuntary full
+    rematerialization' costing 100s of GB/device on qwen/gemma)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                         # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, T, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    xr = x.astype(jnp.float32).reshape(x.shape[:-1] + (d // 2, 2))
+    x1, x2 = xr[..., 0], xr[..., 1]
+    out = jnp.stack([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def hint_batch_sharding(x: jax.Array) -> jax.Array:
+    """Best-effort sharding hint: leading (batch) dim on the DP axes.
+
+    GSPMD occasionally drops batch sharding through scan carries / reshapes;
+    this re-pins it. No-op when no mesh is in scope (CPU unit tests)."""
+    from jax.sharding import PartitionSpec as P
+
+    for dp in (("pod", "data"), "data"):
+        try:
+            return jax.lax.with_sharding_constraint(
+                x, P(*((dp,) + (None,) * (x.ndim - 1))))
+        except Exception:
+            continue
+    return x
+
+
+def hint_activation_sharding(x: jax.Array) -> jax.Array:
+    """Layer-boundary activation hint: batch on DP axes AND sequence on the
+    model axis (sequence parallelism, Korthikanti et al.): the per-group
+    saved carries of the layer scan are the dominant train-time residency
+    (n_groups x [B, S, d]); 2-D sharding cuts them by the model-axis width.
+    Falls back to batch-only for short sequences / decode steps."""
+    from jax.sharding import PartitionSpec as P
+
+    if x.ndim >= 3 and x.shape[1] >= 64:
+        for dp in (("pod", "data"), "data"):
+            try:
+                return jax.lax.with_sharding_constraint(
+                    x, P(*((dp, "model") + (None,) * (x.ndim - 2))))
+            except Exception:
+                continue
+    return hint_batch_sharding(x)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / plain GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, gating: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_in": _dense_init(k1, (d_model, d_ff), d_model, dtype),
+        "w_out": _dense_init(k2, (d_ff, d_model), d_ff, dtype),
+    }
+    if gating in ("swiglu", "geglu"):
+        p["w_gate"] = _dense_init(k3, (d_model, d_ff), d_model, dtype)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, gating: str) -> jax.Array:
+    h = jnp.einsum("btd,df->btf", x, p["w_in"], preferred_element_type=jnp.float32)
+    if gating == "swiglu":
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"], preferred_element_type=jnp.float32)
+        h = jax.nn.silu(g) * h
+    elif gating == "geglu":
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"], preferred_element_type=jnp.float32)
+        h = jax.nn.gelu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = h.astype(x.dtype)
+    return jnp.einsum("btf,fd->btd", h, p["w_out"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> Params:
+    return {"table": _dense_init(key, (vocab, d_model), d_model, dtype)}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def lm_head_init(key, d_model: int, vocab: int, dtype) -> Params:
+    return {"w": _dense_init(key, (d_model, vocab), d_model, dtype)}
+
+
+def lm_head(p: Params, x: jax.Array, tied_table: jax.Array | None = None) -> jax.Array:
+    w = tied_table.T if tied_table is not None else p["w"]
+    return jnp.einsum("btd,dv->btv", x, w, preferred_element_type=jnp.float32)
+
+
+def chunked_lm_loss(
+    x: jax.Array,            # [B, S, D] final hidden states
+    w_head: jax.Array,       # [D, V_padded]
+    targets: jax.Array,      # [B, S]
+    real_vocab: int,
+    chunk: int = 512,
+) -> jax.Array:
+    """Mean CE without ever materializing the full [B, S, V] logits.
+
+    Scans over sequence chunks; each chunk's logits are recomputed in the
+    backward pass (jax.checkpoint), so peak memory is one chunk's logits.
+    Padded vocab columns (Megatron-style padding) are masked to -inf.
+    """
+    b, s, d = x.shape
+    v = w_head.shape[-1]
+    c = chunk
+    while s % c:
+        c -= 1
+    n_chunks = s // c
+    pad_mask = (jnp.arange(v) >= real_vocab) * (-1e30)
+
+    def body(total, xs):
+        xc, tc = xs                                     # [B, c, D], [B, c]
+        logits = jnp.einsum("btd,dv->btv", xc, w_head,
+                            preferred_element_type=jnp.float32) + pad_mask
+        total = total + jnp.sum(cross_entropy(logits, tc))
+        return total, None
+
+    xs = (
+        jnp.moveaxis(x.reshape(b, n_chunks, c, d), 1, 0),
+        jnp.moveaxis(targets.reshape(b, n_chunks, c), 1, 0),
+    )
+    total, _ = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                            jnp.zeros((), jnp.float32), xs)
+    return total / (b * s)
+
+
+def cross_entropy(logits_f32: jax.Array, targets: jax.Array) -> jax.Array:
+    """Sharded-vocab-safe CE: the target logit is extracted with an
+    iota==target mask (elementwise + reduce stays sharded under GSPMD;
+    a gather would force an all-gather of the vocab axis)."""
+    v = logits_f32.shape[-1]
+    m = jnp.max(logits_f32, axis=-1, keepdims=True)
+    shifted = logits_f32 - jax.lax.stop_gradient(m)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot_sel = (
+        jax.lax.broadcasted_iota(jnp.int32, logits_f32.shape, logits_f32.ndim - 1)
+        == targets[..., None]
+    )
+    tgt = jnp.sum(jnp.where(onehot_sel, logits_f32, 0.0), axis=-1)
+    return lse - tgt

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts layer: top-k token-choice routing with capacity,
+optional shared (always-on) experts, expert- or tensor-parallel expert
+weights.
+
+Dispatch is SCATTER-based (tokens scattered into per-expert [E, C, D] buffers
+by (expert, position-in-expert) and gathered back), not the classic GShard
+one-hot einsum: the [N, E, C] dispatch tensor is O(tokens^2/E) and would be
+~20 TB for grok-1 train_4k, while the scatter form materializes only
+[N*k, D] + [E, C, D]. Capacity-dropped tokens fall through to the residual
+(standard GShard semantics); serving paths can raise capacity_factor for
+dropless behaviour.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import _dense_init
+
+Params = Dict[str, Any]
+
+
+def _hint(x, axes):
+    """Best-effort sharding constraint; "DP" slots try ("pod","data") then
+    "data"; silently no-op outside a mesh (CPU unit tests)."""
+    from jax.sharding import PartitionSpec as P
+
+    for dp in (("pod", "data"), "data"):
+        spec = tuple(dp if a == "DP" else a for a in axes)
+        try:
+            return jax.lax.with_sharding_constraint(x, P(*spec))
+        except Exception:
+            continue
+    return x
+
+
+def moe_init(key, cfg: ArchConfig, dtype) -> Params:
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": _dense_init(ks[0], (d, m.n_experts), d, jnp.float32),
+        "w_in": _dense_init(ks[1], (m.n_experts, d, f), d, dtype),
+        "w_gate": _dense_init(ks[2], (m.n_experts, d, f), d, dtype),
+        "w_out": _dense_init(ks[3], (m.n_experts, f, d), f, dtype),
+    }
+    if m.n_shared:
+        fs = f * m.n_shared
+        p["shared_in"] = _dense_init(ks[4], (d, fs), d, dtype)
+        p["shared_gate"] = _dense_init(ks[5], (d, fs), d, dtype)
+        p["shared_out"] = _dense_init(ks[6], (fs, d), fs, dtype)
+    return p
+
+
+def _top_k_gating(logits: jax.Array, k: int, renorm: bool) -> Tuple[jax.Array, jax.Array]:
+    """logits [N, E] -> (weights [N, k], indices [N, k])."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)
+    if renorm:
+        weights = weights / jnp.maximum(jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    return weights, idx
+
+
+def moe_apply(p: Params, cfg: ArchConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, T, D] -> (y, aux_loss)."""
+    m = cfg.moe
+    b, t, d = x.shape
+    n = b * t
+    e, k = m.n_experts, m.top_k
+    cap = max(int(m.capacity_factor * k * n / e), 1)
+
+    xf = x.reshape(n, d)
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
+    weights, idx = _top_k_gating(logits, k, m.router_renorm)          # [N,k]
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)                  # [N,k,E]
+    flat_oh = onehot.reshape(n * k, e)
+    pos = (jnp.cumsum(flat_oh, axis=0) - flat_oh)                     # [N*k,E]
+    pos = jnp.sum(pos.reshape(n, k, e) * onehot, axis=-1)             # [N,k]
+    keep = (pos < cap).astype(x.dtype)                                # [N,k]
+
+    # ---- scatter dispatch: [E, C, D] expert inputs
+    # capacity dim on the DP axes, expert-FFN hidden on "model"; the expert
+    # dim stays UNSHARDED at the scatter (a data-dependent scatter across a
+    # sharded dim forces GSPMD to fully replicate: +177 GB/device measured
+    # on deepseek). EP weights are all-gathered at use instead; a shard_map
+    # all-to-all dispatch is the recorded follow-up (EXPERIMENTS.md §Perf).
+    e_ax = None
+    f_ax = "model"
+    fe = idx.reshape(n * k)                                            # expert id
+    fp = jnp.minimum(pos.reshape(n * k), cap - 1)                      # slot
+    fk = keep.reshape(n * k)
+    src = _hint(jnp.repeat(xf, k, axis=0) * fk[:, None], ("DP", None))  # [N*k, D]
+    xe = jnp.zeros((e, cap, d), x.dtype).at[fe, fp].add(src)
+    xe = _hint(xe, (e_ax, "DP", None))
+
+    # ---- expert FFNs (swiglu)
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_in"], preferred_element_type=jnp.float32)
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"], preferred_element_type=jnp.float32)
+    h = _hint(h, (e_ax, "DP", f_ax))
+    g = _hint(g, (e_ax, "DP", f_ax))
+    h = (jax.nn.silu(g) * h).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"], preferred_element_type=jnp.float32).astype(x.dtype)
+    ye = _hint(ye, (e_ax, "DP", None))
+
+    # ---- gather combine
+    back = _hint(ye[fe, fp] * fk[:, None], ("DP", None))               # [N*k, D]
+    back = back.reshape(n, k, d) * weights[..., None].astype(x.dtype)
+    y = jnp.sum(back, axis=1)
+
+    if m.n_shared:
+        hs = jnp.einsum("nd,df->nf", xf, p["shared_in"], preferred_element_type=jnp.float32)
+        gs = jnp.einsum("nd,df->nf", xf, p["shared_gate"], preferred_element_type=jnp.float32)
+        hs = (jax.nn.silu(gs) * hs).astype(x.dtype)
+        y = y + jnp.einsum("nf,fd->nd", hs, p["shared_out"],
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # load-balancing aux loss (Switch/GShard form)
+    me = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(b, t, d), aux

@@ -1,0 +1,90 @@
+"""Griffin / RecurrentGemma recurrent block: conv1d + RG-LRU mixer.
+
+Block structure (Griffin):
+    x -> [linear -> conv1d(w=4) -> RG-LRU] * gelu(linear gate) -> out proj
+
+The RG-LRU recurrence runs through the Pallas kernel on TPU (VMEM-resident
+state); the jnp reference path elsewhere. Decode carries (conv tail, h) as
+an O(1) state cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from .layers import _dense_init
+
+Params = Dict[str, Any]
+
+CONV_W = 4
+
+
+def rglru_block_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    dr = d  # recurrent width = d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": _dense_init(ks[0], (d, dr), d, dtype),
+        "w_gate": _dense_init(ks[1], (d, dr), d, dtype),
+        "conv_w": _dense_init(ks[2], (CONV_W, dr), CONV_W, dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_r": _dense_init(ks[3], (dr, dr), dr, dtype),
+        "w_i": _dense_init(ks[4], (dr, dr), dr, dtype),
+        # init so that a ~ U[0.9, 0.999]-ish decay band (Griffin appendix)
+        "log_lambda": jnp.asarray(
+            jnp.log(jnp.expm1(jnp.linspace(0.3, 0.8, dr))), jnp.float32),
+        "w_out": _dense_init(ks[5], (dr, d), dr, dtype),
+    }
+
+
+def _conv1d(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array | None):
+    """Causal depthwise conv, width CONV_W. tail: [B, CONV_W-1, D] history."""
+    bsz, t, d = x.shape
+    if tail is None:
+        tail = jnp.zeros((bsz, CONV_W - 1, d), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(
+        xp[:, i : i + t] * w[i][None, None, :] for i in range(CONV_W)
+    ) + b[None, None, :]
+    new_tail = xp[:, -(CONV_W - 1):]
+    return out.astype(x.dtype), new_tail
+
+
+def rglru_block_apply(
+    p: Params, cfg: ArchConfig, x: jax.Array,
+    state: Dict[str, jax.Array] | None = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, T, D]. state: {"h": [B,D], "conv": [B,3,D]} or None (train)."""
+    xr = jnp.einsum("btd,de->bte", x, p["w_x"], preferred_element_type=jnp.float32).astype(x.dtype)
+    gate = jnp.einsum("btd,de->bte", x, p["w_gate"], preferred_element_type=jnp.float32).astype(x.dtype)
+
+    tail = state["conv"] if state is not None else None
+    xc, new_tail = _conv1d(xr, p["conv_w"], p["conv_b"], tail)
+
+    r = jnp.einsum("bte,ef->btf", xc, p["w_r"], preferred_element_type=jnp.float32).astype(x.dtype)
+    i = jnp.einsum("bte,ef->btf", xc, p["w_i"], preferred_element_type=jnp.float32).astype(x.dtype)
+    # recurrence is elementwise over features: keep the f32 gate tensors
+    # feature-sharded on "model" (time cannot shard; batch stays on DP)
+    from .moe import _hint
+    xc = _hint(xc, ("DP", None, "model"))
+    r = _hint(r, ("DP", None, "model"))
+    i = _hint(i, ("DP", None, "model"))
+    h0 = state["h"] if state is not None else None
+    y, h_last = kops.rglru_scan(xc, r, i, p["log_lambda"], h0=h0,
+                                use_pallas=False)  # jnp path; Pallas on TPU
+    y = y * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"h": h_last, "conv": new_tail}
+
+
+def rglru_make_state(cfg: ArchConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, d), dtype),
+    }

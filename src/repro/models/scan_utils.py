@@ -1,0 +1,58 @@
+"""Memory-bounded sequential scans.
+
+jax.lax.scan saves every step's carry for the backward pass: a recurrence
+over T=4096 steps with an O(B*D)+ state would checkpoint T copies — the
+dominant memory term for the recurrent architectures (xLSTM's matrix memory
+is B*H*dh^2 *per step*). `chunked_scan` nests two scans: the outer one saves
+only chunk-boundary carries and each chunk body is rematerialized in the
+backward pass (sqrt-style checkpointing), bounding saved state to
+T/chunk * |state| while keeping per-step semantics bit-exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(
+    body: Callable[[Any, Any], Tuple[Any, Any]],
+    init: Any,
+    xs: Any,
+    chunk: int = 256,
+    remat: bool = True,
+):
+    """Drop-in lax.scan with chunk-boundary-only checkpointing.
+
+    body(carry, x_t) -> (carry, y_t), scanned over leading axis T of `xs`.
+    T must be divisible by `chunk` (callers pad or pick a divisor).
+    """
+    leaves = jax.tree.leaves(xs)
+    t = leaves[0].shape[0]
+    if t <= chunk:
+        return jax.lax.scan(body, init, xs)
+    assert t % chunk == 0, (t, chunk)
+    n_chunks = t // chunk
+
+    xs_chunked = jax.tree.map(
+        lambda a: a.reshape((n_chunks, chunk) + a.shape[1:]), xs)
+
+    def chunk_body(carry, x_chunk):
+        return jax.lax.scan(body, carry, x_chunk)
+
+    if remat:
+        chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+
+    carry, ys = jax.lax.scan(chunk_body, init, xs_chunked)
+    ys = jax.tree.map(lambda a: a.reshape((t,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+def pick_chunk(t: int, target: int = 256) -> int:
+    """Largest divisor of t that is <= target (fallback: t)."""
+    for c in range(min(target, t), 0, -1):
+        if t % c == 0:
+            return c
+    return t

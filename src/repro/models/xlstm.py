@@ -1,0 +1,267 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with exponential gating and stabilizer state).
+
+mLSTM block (xLSTM paper, Fig. 9 left): pre-norm -> up-proj (factor 2) ->
+{q, k, v from conv'd path, i/f/o gates} -> mLSTM cell -> down-proj.
+sLSTM block: pre-norm -> sLSTM cell (per-head) -> gated FFN (factor 4/3).
+
+Both recurrences are linear in T (sub-quadratic: xlstm runs long_500k); decode
+carries O(1) state per layer:
+  mLSTM: C [B,H,dk,dv], n [B,H,dk], m [B,H]
+  sLSTM: c,n,h [B,D], m [B,D]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import _dense_init, rmsnorm, rmsnorm_init
+from .scan_utils import chunked_scan, pick_chunk
+
+Params = Dict[str, Any]
+
+PF_MLSTM = 2.0
+PF_SLSTM = 4.0 / 3.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    di = int(PF_MLSTM * d)
+    h = cfg.n_heads
+    dh = di // h
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": _dense_init(ks[0], (d, di), d, dtype),
+        "w_qkv": _dense_init(ks[1], (di, 3, h, dh), di, dtype),
+        "w_ifo": _dense_init(ks[2], (di, 3, h), di, jnp.float32),
+        "b_if": jnp.stack([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]),  # f-gate bias >0
+        "out_norm": rmsnorm_init(di, dtype),
+        "w_down": _dense_init(ks[3], (di, d), di, dtype),
+    }
+
+
+def _mlstm_cell(q, k, v, i_pre, f_pre, state):
+    """Sequential mLSTM with exponential gating + stabilizer m.
+
+    q,k,v: [B,T,H,Dh]; i_pre,f_pre: [B,T,H]; state: (C, n, m) or None.
+    Returns (h_out [B,T,H,Dh], state')."""
+    b, t, h, dh = q.shape
+    scale = 1.0 / jnp.sqrt(dh)
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def step(carry, xs):
+        c, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = xs                 # [B,H,Dh], ..., [B,H]
+        m_new = jnp.maximum(f_t + m, i_t)            # log-space stabilizer
+        i_eff = jnp.exp(i_t - m_new)
+        f_eff = jnp.exp(f_t + m - m_new)
+        k_s = k_t * scale
+        c = f_eff[..., None, None] * c + i_eff[..., None, None] * (
+            k_s[..., :, None] * v_t[..., None, :])
+        n = f_eff[..., None] * n + i_eff[..., None] * k_s
+        num = jnp.einsum("bhkv,bhk->bhv", c, q_t)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t))
+        h_t = num / jnp.maximum(den, 1.0)[..., None]
+        return (c, n, m_new), h_t
+
+    xs = (
+        q.swapaxes(0, 1).astype(jnp.float32),
+        k.swapaxes(0, 1).astype(jnp.float32),
+        v.swapaxes(0, 1).astype(jnp.float32),
+        i_pre.swapaxes(0, 1).astype(jnp.float32),
+        f_pre.swapaxes(0, 1).astype(jnp.float32),
+    )
+    (c, n, m), hs = chunked_scan(step, (c0, n0, m0), xs, chunk=pick_chunk(t))
+    return hs.swapaxes(0, 1), (c, n, m)
+
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, f_pre, state, chunk: int = 256):
+    """Chunkwise-parallel mLSTM: same semantics as _mlstm_cell, but the
+    matrix state C is touched once per CHUNK instead of once per step.
+
+    The sequential form reads+writes C [B,H,dh,dh] every timestep — measured
+    ~198 GB/partition HBM traffic on xlstm-125m train_4k (6.9% roofline).
+    Derivation: with F_t = cumsum(f), D_s = i_s - F_s, M_t = cummax(D),
+    g_t = max(m_0, M_t), the stabilizer is m_t = F_t + g_t and
+
+        h_t = [ e^{m0-g_t} (q_t C_0) + sum_{s<=t} e^{D_s-g_t} (q_t.k_s) v_s ]
+              / max(| e^{m0-g_t} (q_t n_0) + sum_s e^{D_s-g_t} (q_t.k_s) |, 1)
+
+    — the intra-chunk sum is an L x L masked matmul (parallel) and the carry
+    (C, n, m) updates once per chunk with g_L. All weights e^{D_s-g_t} <= 1.
+    """
+    b, t, h, dh = q.shape
+    scale = 1.0 / jnp.sqrt(dh)
+    c0, n0, m0 = state
+    L = pick_chunk(t, chunk)
+    nc = t // L
+
+    def feat_chunks(a):        # [B,T,H,dh] -> [nc,B,H,L,dh]
+        a = a.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(b, h, nc, L, dh)
+        return jnp.moveaxis(a, 2, 0)
+
+    def gate_chunks(a):        # [B,T,H] -> [nc,B,H,L]
+        a = a.astype(jnp.float32).transpose(0, 2, 1).reshape(b, h, nc, L)
+        return jnp.moveaxis(a, 2, 0)
+
+    qs, ks, vs = feat_chunks(q) , feat_chunks(k) * scale, feat_chunks(v)
+    is_, fs = gate_chunks(i_pre), gate_chunks(f_pre)
+    causal = jnp.tril(jnp.ones((L, L), jnp.float32))
+
+    def chunk_body(carry, xs):
+        c, n, m_in = carry
+        qc, kc, vc, ic, fc = xs                    # [B,H,L,dh] / [B,H,L]
+        F = jnp.cumsum(fc, axis=-1)                # [B,H,L]
+        D = ic - F
+        M = jax.lax.cummax(D, axis=2)
+        g = jnp.maximum(m_in[..., None], M)        # [B,H,L]
+        alpha = jnp.exp(m_in[..., None] - g)       # inter coefficient
+
+        qk = jnp.einsum("bhld,bhsd->bhls", qc, kc)             # [B,H,L,L]
+        w = jnp.exp(D[:, :, None, :] - g[..., None]) * causal  # e^{D_s-g_t}
+        qkw = qk * w
+        intra = jnp.einsum("bhls,bhsd->bhld", qkw, vc)
+        num = alpha[..., None] * jnp.einsum("bhkv,bhlk->bhlv", c, qc) + intra
+        den = alpha * jnp.einsum("bhk,bhlk->bhl", n, qc) + jnp.sum(qkw, axis=-1)
+        h_out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+        g_l = g[..., -1]                                        # [B,H]
+        decay = jnp.exp(D - g_l[..., None])[..., None]          # [B,H,L,1]
+        beta = jnp.exp(m_in - g_l)
+        c_new = beta[..., None, None] * c + jnp.einsum("bhsk,bhsv->bhkv",
+                                                       kc * decay, vc)
+        n_new = beta[..., None] * n + jnp.sum(kc * decay, axis=2)
+        m_new = F[..., -1] + g_l
+        return (c_new, n_new, m_new), h_out
+
+    body = jax.checkpoint(chunk_body, prevent_cse=False)
+    (c, n, m), hs = jax.lax.scan(body, (c0, n0, m0), (qs, ks, vs, is_, fs))
+    hs = jnp.moveaxis(hs, 0, 2).reshape(b, h, t, dh).transpose(0, 2, 1, 3)
+    return hs, (c, n, m)
+
+
+def mlstm_apply(p: Params, cfg: ArchConfig, x: jax.Array, state=None):
+    b, t, d = x.shape
+    h = cfg.n_heads
+    # store/AR in the activation dtype: the TP all-reduce after the di
+    # contraction otherwise moves f32 (xlstm prefill_32k was collective-bound
+    # at 4.6 GB/chip of f32 partials — EXPERIMENTS.md §Perf)
+    up = jnp.einsum("btd,de->bte", x, p["w_up"],
+                    preferred_element_type=x.dtype)
+    qkv = jnp.einsum("bte,eshk->btshk", up, p["w_qkv"],
+                     preferred_element_type=x.dtype)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    ifo = jnp.einsum("bte,esh->btsh", up.astype(jnp.float32), p["w_ifo"])
+    i_pre = ifo[:, :, 0] + p["b_if"][0][None, None]
+    f_pre = jax.nn.log_sigmoid(ifo[:, :, 1] + p["b_if"][1][None, None])
+    o_gate = jax.nn.sigmoid(ifo[:, :, 2])
+    if t >= 32:
+        init = state if state is not None else (
+            jnp.zeros((b, h, q.shape[-1], q.shape[-1]), jnp.float32),
+            jnp.zeros((b, h, q.shape[-1]), jnp.float32),
+            jnp.full((b, h), -jnp.inf, jnp.float32))
+        hs, new_state = _mlstm_chunkwise(q, k, v, i_pre, f_pre, init)
+    else:
+        hs, new_state = _mlstm_cell(q, k, v, i_pre, f_pre, state)
+    hs = hs * o_gate[..., None]
+    hs = hs.reshape(b, t, -1).astype(x.dtype)
+    hs = rmsnorm(p["out_norm"], hs, cfg.norm_eps)
+    return jnp.einsum("bte,ed->btd", hs, p["w_down"],
+                      preferred_element_type=x.dtype), new_state
+
+
+def mlstm_make_state(cfg: ArchConfig, batch: int):
+    h = cfg.n_heads
+    dh = int(PF_MLSTM * cfg.d_model) // h
+    return (
+        jnp.zeros((batch, h, dh, dh), jnp.float32),
+        jnp.zeros((batch, h, dh), jnp.float32),
+        jnp.full((batch, h), -jnp.inf, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    df = int(PF_SLSTM * d)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gates": _dense_init(ks[0], (d, 4, d), d, jnp.float32),   # z,i,f,o
+        "r_gates": _dense_init(ks[1], (d, 4, d), d, jnp.float32),   # recurrent
+        "b_gates": jnp.zeros((4, d)).at[2].set(3.0),                # f bias > 0
+        "ffn_in": _dense_init(ks[2], (d, df), d, dtype),
+        "ffn_gate": _dense_init(ks[3], (d, df), d, dtype),
+        "ffn_out": _dense_init(ks[4], (df, d), df, dtype),
+        "ffn_norm": rmsnorm_init(d, dtype),
+    }
+
+
+def slstm_apply(p: Params, cfg: ArchConfig, x: jax.Array, state=None):
+    b, t, d = x.shape
+    wx = jnp.einsum("btd,dge->btge", x, p["w_gates"].astype(x.dtype),
+                    preferred_element_type=x.dtype).astype(jnp.float32)
+    if state is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.ones((b, d), jnp.float32)
+        m0 = jnp.zeros((b, d), jnp.float32)
+    else:
+        h0, c0, n0, m0 = state
+
+    r_g = p["r_gates"]
+    b_g = p["b_gates"]
+
+    def step(carry, wx_t):
+        h, c, n, m = carry
+        pre = wx_t + jnp.einsum("bd,dge->bge", h, r_g) + b_g[None]
+        z = jnp.tanh(pre[:, 0])
+        i_t = pre[:, 1]
+        f_t = jax.nn.log_sigmoid(pre[:, 2])
+        o = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_eff = jnp.exp(i_t - m_new)
+        f_eff = jnp.exp(f_t + m - m_new)
+        c = f_eff * c + i_eff * z
+        n = f_eff * n + i_eff
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    (h, c, n, m), hs = chunked_scan(step, (h0, c0, n0, m0), wx.swapaxes(0, 1),
+                                    chunk=pick_chunk(t))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    # gated FFN (PF 4/3)
+    yn = rmsnorm(p["ffn_norm"], y, cfg.norm_eps)
+    hi = jnp.einsum("btd,df->btf", yn, p["ffn_in"], preferred_element_type=x.dtype)
+    gi = jnp.einsum("btd,df->btf", yn, p["ffn_gate"], preferred_element_type=x.dtype)
+    hi = (jax.nn.gelu(gi.astype(jnp.float32)) * hi.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("btf,fd->btd", hi, p["ffn_out"],
+                     preferred_element_type=x.dtype)
+    return y + out, (h, c, n, m)
+
+
+def slstm_make_state(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    return (
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.ones((batch, d), jnp.float32),
+        jnp.zeros((batch, d), jnp.float32),
+    )

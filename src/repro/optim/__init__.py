@@ -1,0 +1,2 @@
+from . import compression  # noqa: F401
+from .adamw import AdamWConfig, clip_by_global_norm, cosine_schedule, global_norm, init, update  # noqa: F401

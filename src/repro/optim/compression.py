@@ -1,0 +1,55 @@
+"""Int8 gradient compression with error feedback, for the cross-pod axis.
+
+At 1000+ node scale the pod-level DP all-reduce crosses the slow inter-pod
+links; int8 quantization cuts those bytes 4x (bf16) with error-feedback
+residuals keeping the update unbiased over time.
+
+Mechanism (per leaf): g' = g + residual; q = round(g' / s) clipped to int8
+with s = max|g'| / 127; decompressed dq = q * s; residual' = g' - dq. Under
+pjit the quantize/dequantize pair brackets the gradient reduction so the
+collective moves int8; here we implement the numerics (tested) and mark the
+shard_map hook point.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def init_residuals(grads_like: Params) -> Params:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compress(g: jax.Array, residual: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (q int8, scale f32 scalar, new_residual)."""
+    gf = g.astype(jnp.float32) + residual
+    scale = jnp.max(jnp.abs(gf)) / 127.0
+    safe = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(gf / safe), -127, 127).astype(jnp.int8)
+    dq = q.astype(jnp.float32) * safe
+    return q, scale, gf - dq
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * jnp.maximum(scale, 1e-20)
+
+
+def compress_tree(grads: Params, residuals: Params) -> Tuple[Params, Params]:
+    """Quantize->dequantize every leaf with error feedback.
+
+    Returns (grads_after_qdq, new_residuals). In deployment the int8 tensors
+    are what cross the 'pod' axis (jax.lax.psum inside shard_map); the qdq
+    pair here reproduces the numerics bit-exactly for testing and for
+    single-pod simulation.
+    """
+    g_leaves, treedef = jax.tree.flatten(grads)
+    r_leaves = treedef.flatten_up_to(residuals)
+    triples = [compress(g, r) for g, r in zip(g_leaves, r_leaves)]
+    dq = jax.tree.unflatten(
+        treedef, [decompress(q, s).astype(jnp.float32) for q, s, _ in triples])
+    new_res = jax.tree.unflatten(treedef, [t[2] for t in triples])
+    return dq, new_res

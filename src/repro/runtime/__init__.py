@@ -1,0 +1,7 @@
+from .elastic import plan_mesh, restore_on_mesh  # noqa: F401
+from .supervisor import (  # noqa: F401
+    SimulatedHostFailure,
+    StragglerDetector,
+    Supervisor,
+    SupervisorConfig,
+)

@@ -1,0 +1,1 @@
+from .rules import batch_specs, cache_specs, param_specs, state_specs, to_named  # noqa: F401

@@ -1,0 +1,242 @@
+"""Logical sharding rules: param/cache/batch pytrees -> PartitionSpec trees.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+
+Conventions (DESIGN.md §6):
+  * params are 2-D sharded: FSDP dim -> "data", tensor dim -> "model"
+    (256-way within a pod); params are replicated across "pod" (optimizer
+    states inherit param specs 1:1).
+  * attention head dims: shard the head axis on "model" when divisible by the
+    axis size, else the head_dim axis (qwen's 40 heads, MQA's single kv head),
+    else replicate.
+  * MoE experts: expert dim -> "model" when divisible ("ep"), else TP within
+    the expert FFN ("tp": grok's 8 experts on a 16-wide axis).
+  * caches: batch -> dp axes when divisible (long_500k's batch=1 falls back
+    to replicated batch + "model"-sharded feature dims).
+
+jax requires every sharded dim to divide exactly, so every rule is checked
+against the actual leaf shape and mesh axis sizes (`_fit`) and non-divisible
+axes are dropped dim-by-dim — the rule set degrades gracefully on any mesh
+(production 16x16 or the tests' tiny meshes).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _axes_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def _fit(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop (dim-by-dim) any mesh axis that does not divide the dim size."""
+    fitted = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            fitted.append(None)
+        elif dim % _axes_size(mesh, entry) == 0:
+            fitted.append(entry)
+        else:
+            fitted.append(None)
+    return P(*fitted)
+
+
+def _head_axis(cfg: ArchConfig, n_heads: int, mesh: Mesh):
+    """('model' on heads) | ('model' on head_dim) | replicated."""
+    m = mesh.shape["model"]
+    if n_heads % m == 0:
+        return "heads"
+    if cfg.head_dim % m == 0:
+        return "head_dim"
+    return "none"
+
+
+def _rule(path: str, ndim: int, cfg: ArchConfig, mesh: Mesh) -> P:
+    """Base (unstacked) PartitionSpec for a param leaf."""
+    ep = cfg.moe is not None and cfg.expert_sharding == "ep" \
+        and cfg.moe.n_experts % mesh.shape["model"] == 0
+
+    def ends(*names):
+        return any(path.endswith(n) for n in names)
+
+    q_mode = _head_axis(cfg, cfg.n_heads, mesh)
+    kv_mode = _head_axis(cfg, cfg.n_kv_heads, mesh)
+
+    # ---- embeddings / head
+    if ends("embed/table"):
+        return P("model", "data")
+    if ends("lm_head/w"):
+        return P("data", "model")
+
+    # ---- attention (GQA + MLA)
+    if ends("attn/wq"):
+        return {"heads": P("data", "model", None),
+                "head_dim": P("data", None, "model"),
+                "none": P("data", None, None)}[q_mode]
+    if ends("attn/wk", "attn/wv"):
+        return {"heads": P("data", "model", None),
+                "head_dim": P("data", None, "model"),
+                "none": P("data", None, None)}[kv_mode]
+    if ends("attn/wo"):
+        return {"heads": P("model", None, "data"),
+                "head_dim": P(None, "model", "data"),
+                "none": P(None, None, "data")}[q_mode]
+    if ends("attn/w_kv_a"):
+        return P("data", None)
+    if ends("attn/w_uk", "attn/w_uv"):
+        return {"heads": P(None, "model", None),
+                "head_dim": P("model", None, None),
+                "none": P(None, None, None)}[q_mode]
+
+    # ---- MoE
+    if ends("mlp/router"):
+        return P("data", None)
+    if ends("mlp/w_in", "mlp/w_gate") and ndim == 3:
+        return P("model", "data", None) if ep else P(None, "data", "model")
+    if ends("mlp/w_out") and ndim == 3:
+        return P("model", None, "data") if ep else P(None, "model", "data")
+    if ends("mlp/shared_in", "mlp/shared_gate"):
+        return P("data", "model")
+    if ends("mlp/shared_out"):
+        return P("model", "data")
+
+    # ---- dense MLP
+    if ends("mlp/w_in", "mlp/w_gate"):
+        return P("data", "model")
+    if ends("mlp/w_out"):
+        return P("model", "data")
+
+    # ---- RG-LRU block
+    if ends("rec/w_x", "rec/w_gate"):
+        return P("data", "model")
+    if ends("rec/w_r", "rec/w_i"):
+        return P("model", None)
+    if ends("rec/conv_w"):
+        return P(None, "model")
+    if ends("rec/w_out"):
+        return P("model", "data")
+
+    # ---- xLSTM
+    if ends("cell/w_up"):
+        return P("data", "model")
+    if ends("cell/w_qkv"):
+        return P("model", None, None, None)
+    if ends("cell/w_ifo"):
+        return P("model", None, None)
+    if ends("cell/w_down"):
+        return P("model", "data")
+    if ends("cell/w_gates", "cell/r_gates"):
+        return P("data", None, "model")
+    if ends("cell/ffn_in", "cell/ffn_gate"):
+        return P("data", "model")
+    if ends("cell/ffn_out"):
+        return P("model", "data")
+
+    # ---- norms, biases, router scalars: replicated
+    return P(*([None] * ndim))
+
+
+def _path_str(key_path) -> str:
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ArchConfig, params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching `params` (works on ShapeDtypeStructs)."""
+
+    def spec_for(key_path, leaf) -> P:
+        path = _path_str(key_path)
+        stacked = "/groups/" in "/" + path + "/"
+        ndim = leaf.ndim - (1 if stacked else 0)
+        base = _rule(path, ndim, cfg, mesh)
+        if not cfg.tensor_parallel:
+            # small-model policy: params replicated across "model" (the DP
+            # axes still shard FSDP dims); kills every per-layer TP AR
+            base = P(*(None if e == "model" else e for e in tuple(base)))
+        if stacked:
+            base = P(*((None,) + tuple(base)))
+        return _fit(base, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def state_specs(cfg: ArchConfig, state: Any, mesh: Mesh) -> Any:
+    """Specs for the full TrainState {"params","opt":{m,v,count},"step",...}."""
+    out = {
+        "params": param_specs(cfg, state["params"], mesh),
+        "opt": {
+            "m": param_specs(cfg, state["opt"]["m"], mesh),
+            "v": param_specs(cfg, state["opt"]["v"], mesh),
+            "count": P(),
+        },
+        "step": P(),
+    }
+    if "residuals" in state:
+        out["residuals"] = param_specs(cfg, state["residuals"], mesh)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, caches: Any, mesh: Mesh) -> Any:
+    """KV/state caches: batch -> dp axes; widest trailing dim -> "model".
+
+    Cache layouts (batch is the first unstacked dim everywhere):
+      dense KV   [B, S, Hkv, hd]   -> (dp, None, model-on-heads-or-hd)
+      MLA latent [B, S, R]         -> (dp, None, "model")
+      ring       [B, W, Hkv, hd]   -> like dense
+      states     [B, ...]          -> (dp, None..., "model" on the last dim)
+    """
+    dp = _dp_axes(mesh)
+
+    def spec_for(key_path, leaf) -> P:
+        path = _path_str(key_path)
+        stacked = "/groups/" in "/" + path + "/"
+        nd = leaf.ndim - (1 if stacked else 0)
+        entries: list = [dp] + [None] * (nd - 1)
+        if nd >= 2:
+            entries[-1] = "model"   # feature dim (hd / latent / state width)
+        base: tuple = tuple(entries)
+        if stacked:
+            base = (None,) + base
+        return _fit(P(*base), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches)
+
+
+def batch_specs(cfg: ArchConfig, batch: Any, mesh: Mesh) -> Any:
+    dp = _dp_axes(mesh)
+
+    def spec_for(_key_path, leaf) -> P:
+        return _fit(P(*((dp,) + (None,) * (leaf.ndim - 1))), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+def to_named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,9 @@
+from .step import (  # noqa: F401
+    adra_sample,
+    greedy_sample,
+    init_state,
+    make_decode_step,
+    make_eval_step,
+    make_prefill_step,
+    make_train_step,
+)

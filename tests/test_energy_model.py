@@ -1,0 +1,80 @@
+"""Energy/EDP model vs the paper's reported numbers (Sec. IV, Figs 4-7)."""
+import numpy as np
+import pytest
+
+from repro.core import energy
+
+
+def test_current_sensing_anchor_1024():
+    r = energy.current_sensing(1024)
+    # paper: 1.94x speedup, 41.18% energy decrease, 69.04% EDP decrease
+    assert r.speedup == pytest.approx(1.94, abs=0.01)
+    assert r.energy_decrease_pct == pytest.approx(41.18, abs=0.2)
+    assert r.edp_decrease_pct == pytest.approx(69.04, abs=1.2)  # paper rounding
+    # CiM op costs 1.24x a standard read
+    assert r.cim.energy / r.read.energy == pytest.approx(1.24, abs=0.01)
+    # RBL charging dominates: 91% of read, 74% of CiM energy (Fig 4a)
+    assert r.read.breakdown["bitline"] / r.read.energy == pytest.approx(0.91, abs=0.01)
+    assert r.cim.breakdown["bitline"] / r.cim.energy == pytest.approx(0.74, abs=0.01)
+
+
+def test_current_sensing_benefits_grow_with_array_size():
+    sw = energy.sweep("current")
+    sizes = sorted(sw)
+    ed = [sw[s].energy_decrease_pct for s in sizes]
+    sp = [sw[s].speedup for s in sizes]
+    edp = [sw[s].edp_decrease_pct for s in sizes]
+    assert all(np.diff(ed) > 0) and all(np.diff(sp) > 0) and all(np.diff(edp) > 0)
+    assert all(s < 2.0 for s in sp)  # bounded by the 2-access baseline
+
+
+def test_scheme1_anchor_1024():
+    r = energy.voltage_scheme1(1024)
+    # paper: +20-23% energy, 1.57-1.73x speedup, 23.26-28.81% EDP decrease
+    assert -23.0 <= r.energy_decrease_pct <= -20.0
+    assert 1.57 <= r.speedup <= 1.73
+    assert 23.26 <= r.edp_decrease_pct <= 28.81 + 0.3
+    # ADRA discharges 6*Delta vs 2*Delta -> 3x bitline energy (1.5x vs baseline)
+    assert r.cim.breakdown["bitline"] / r.read.breakdown["bitline"] == pytest.approx(3.0)
+
+
+def test_scheme2_anchor_1024():
+    r = energy.voltage_scheme2(1024)
+    # paper: 1.945-1.983x speedup, 35.5-45.8% less energy, 66.83-72.6% EDP dec.
+    assert 1.945 <= r.speedup <= 1.983
+    assert 35.5 <= r.energy_decrease_pct <= 45.8
+    assert 66.83 <= r.edp_decrease_pct <= 72.6
+    # scheme 2: bitline energy identical for read and CiM
+    assert r.cim.breakdown["bitline"] == pytest.approx(r.read.breakdown["bitline"])
+
+
+def test_frequency_crossover_7p53_mhz():
+    f = energy.frequency_crossover_hz()
+    assert f == pytest.approx(7.53e6, rel=0.01)
+    # below f*: scheme 2 wins; above: scheme 1 wins
+    lo = energy.scheme_energies_vs_frequency(1e6)
+    hi = energy.scheme_energies_vs_frequency(50e6)
+    assert lo["scheme2"] < lo["scheme1"]
+    assert hi["scheme1"] < hi["scheme2"]
+
+
+def test_parallelism_crossover_42pct():
+    p = energy.parallelism_crossover()
+    assert p == pytest.approx(0.42, abs=0.02)  # paper: ~42%
+    lo = energy.scheme_energies_vs_parallelism(0.2)
+    hi = energy.scheme_energies_vs_parallelism(0.9)
+    assert lo["scheme2"] < lo["scheme1"]   # low parallelism: scheme 2 wins
+    assert hi["scheme1"] < hi["scheme2"]   # high parallelism: scheme 1 wins
+
+
+def test_sense_margin_consistent_with_bitline_budget():
+    # 6*Delta swing must stay below VDD and above 50 mV margins
+    assert energy.CIM_SWING < energy.V_DD
+    assert energy.DELTA_SENSE > 0.05
+
+
+def test_edp_summary_all_schemes_positive():
+    s = energy.edp_summary()
+    for scheme, row in s.items():
+        assert row["edp_decrease_pct"] > 20.0, scheme  # paper headline: 23.2-72.6%
+        assert 23.2 - 0.3 <= row["edp_decrease_pct"] <= 72.6 + 0.3
