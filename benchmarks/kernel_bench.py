@@ -1,11 +1,14 @@
-"""ADRA bit-plane kernel benchmark: fused single-pass vs per-function
-baseline passes — the TPU translation of the paper's one-vs-two memory
-access argument.
+"""CiM engine benchmark: ONE fused pass vs per-function baseline passes —
+the TPU translation of the paper's one-vs-two memory access argument,
+generalized to the full op surface.
 
-Reports (a) the HBM traffic model for TPU-scale tensors, (b) measured
-wall-time of the jnp oracle paths on THIS host (CPU; interpret-mode Pallas
-is not a performance proxy), and (c) the projected ADRA-array EDP for the
-same op counts from the calibrated paper model.
+The fused engine computes a Boolean function + subtraction + comparison from
+a single streamed pass over both plane stacks; the near-memory baseline
+re-reads the operands once per function. Reports (a) the modeled and the
+MEASURED (actual buffer bytes) HBM traffic ratio, (b) wall-time of fused vs
+unfused execution on this host's portable backend, and (c) the projected
+ADRA-array energy for the same op counts from the calibrated paper model,
+via the engine's accounting ledger.
 """
 import time
 
@@ -13,18 +16,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import energy
-from repro.core.bitplane import pack_bitplanes
-from repro.kernels import ref
-from repro.kernels.adra_bitplane import traffic_model_bytes
+from repro import cim
+from repro.cim import PlanePack
+
+#: the fused request: Boolean fn + subtraction + comparison, one access
+FUSED_OPS = ("xor", "sub", "lt", "eq")
+#: the per-function baseline: one full access per function
+BASELINE_PASSES = (("xor",), ("sub",), ("lt", "eq"))
 
 
-def _time(fn, *args, n=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+def _time(fn, n=5):
+    jax.tree.map(lambda x: x.block_until_ready(),
+                 jax.tree.leaves(fn()))  # warmup / compile
     t0 = time.perf_counter()
     for _ in range(n):
-        out = fn(*args)
-        jax.tree.map(lambda x: x.block_until_ready(), out)
+        out = fn()
+        jax.tree.map(lambda x: x.block_until_ready(), jax.tree.leaves(out))
     return (time.perf_counter() - t0) / n * 1e6
 
 
@@ -33,26 +40,47 @@ def main():
     rng = np.random.RandomState(0)
     a = jnp.array(rng.randint(-2**15, 2**15, n_words), jnp.int32)
     b = jnp.array(rng.randint(-2**15, 2**15, n_words), jnp.int32)
-    ap, bp = pack_bitplanes(a, n_bits), pack_bitplanes(b, n_bits)
+    pa, pb = PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits)
 
-    # traffic model (the roofline argument)
-    t = traffic_model_bytes(n_bits, ap.shape[1])
-    print(f"kernel_traffic_fused_bytes,{n_words},{t['fused']:.0f},")
-    print(f"kernel_traffic_baseline_bytes,{n_words},{t['baseline']:.0f},")
-    print(f"kernel_traffic_ratio,{n_words},{t['ratio']:.3f},paper: ~2 accesses vs 1")
+    # traffic: the roofline argument, modeled and measured from real buffers
+    t = cim.traffic_model_bytes(n_bits, pa.planes.shape[1], ops=FUSED_OPS,
+                                baseline_passes=BASELINE_PASSES)
+    print(f"kernel_traffic_fused_bytes,{n_words},{t['fused']:.0f},xor+sub+cmp one pass")
+    print(f"kernel_traffic_baseline_bytes,{n_words},{t['baseline']:.0f},one pass per function")
+    print(f"kernel_traffic_model_ratio,{n_words},{t['ratio']:.3f},paper: k accesses vs 1")
+    m = cim.measured_traffic_bytes(pa, pb, FUSED_OPS,
+                                   baseline_passes=BASELINE_PASSES,
+                                   backend="jnp-boolean")
+    print(f"kernel_traffic_measured_ratio,{n_words},{m['ratio']:.3f},"
+          f"actual buffer bytes, >1.5 required")
+    assert m["ratio"] > 1.5, m
 
-    # oracle-path wall time on this host (sanity, not TPU perf)
-    fused = jax.jit(lambda x, y: ref.adra_bitplane_ref(x, y, 1))
-    us = _time(fused, ap, bp)
-    print(f"kernel_oracle_fused_us,{n_words},{us:.1f},jnp path on CPU host")
+    # wall time of fused vs unfused on the portable backend (host sanity,
+    # not TPU perf; interpret-mode Pallas is not a performance proxy)
+    fused = jax.jit(lambda: cim.execute(pa, pb, FUSED_OPS,
+                                        backend="jnp-boolean"))
+    unfused = jax.jit(lambda: cim.execute_unfused(
+        pa, pb, BASELINE_PASSES, backend="jnp-boolean"))
+    us_f = _time(fused)
+    us_u = _time(unfused)
+    print(f"kernel_fused_us,{n_words},{us_f:.1f},jnp-boolean backend on host")
+    print(f"kernel_unfused_us,{n_words},{us_u:.1f},per-function passes")
 
-    # projected ADRA-array energy for the same op count (paper model)
-    ops32 = n_words * n_bits / 32
-    r = energy.current_sensing(1024)
-    saved = (r.baseline.energy - r.cim.energy) * ops32
-    print(f"kernel_projected_adra_energy_saved_fj,{n_words},{energy.to_fj(saved):.0f},"
-          f"current sensing @1024^2")
-    print(f"kernel_projected_edp_decrease_pct,{n_words},{r.edp_decrease_pct:.2f},")
+    # projected ADRA-array energy via the engine ledger (paper model)
+    led = cim.ledger()
+    led.reset()
+    cim.execute(pa, pb, FUSED_OPS, backend="jnp-boolean")
+    fused_proj = led.projected(scheme="current")
+    led.reset()
+    cim.execute_unfused(pa, pb, BASELINE_PASSES, backend="jnp-boolean")
+    base_proj = led.projected(scheme="current")
+    ratio = base_proj["cim_energy"] / fused_proj["cim_energy"]
+    print(f"kernel_ledger_access_energy_ratio,{n_words},{ratio:.2f},"
+          f"unfused charges {ratio:.0f}x the accesses")
+    print(f"kernel_projected_adra_energy_saved_fj,{n_words},"
+          f"{fused_proj['energy_saved_fj']:.0f},current sensing @1024^2")
+    print(f"kernel_projected_edp_decrease_pct,{n_words},"
+          f"{fused_proj['edp_decrease_pct']:.2f},")
 
 
 if __name__ == "__main__":

@@ -60,7 +60,20 @@ cmp_ = cim_compare(x, y, n_bits=8, mode="analog")
 print(f"   x={np.array(x)}, y={np.array(y)}")
 print(f"   x-y={np.array(sub.value)}, lt={np.array(cmp_.lt)}, eq={np.array(cmp_.eq)}")
 
-print("\n5) energy/latency model (calibrated to the paper's SPICE anchors):")
+print("\n5) unified CiM engine: same op surface, any backend, one access:")
+from repro import cim
+from repro.cim import PlanePack
+
+pa, pb = PlanePack.pack(x, 8), PlanePack.pack(y, 8)
+for backend in ("jnp-boolean", "pallas-interpret", "analog-oracle"):
+    out = cim.execute(pa, pb, ("xor", "sub", "lt"), backend=backend)
+    print(f"   [{backend:16s}] xor={np.array(out['xor'].unpack())} "
+          f"sub={np.array(out['sub'].unpack())} lt={np.array(out['lt'].unpack())}")
+led = cim.ledger()
+print(f"   ledger: {led.accesses} accesses charged, "
+      f"projected EDP -{led.projected()['edp_decrease_pct']:.1f}%")
+
+print("\n6) energy/latency model (calibrated to the paper's SPICE anchors):")
 for name, r in [("current sensing", current_sensing(1024)),
                 ("voltage scheme 1", voltage_scheme1(1024)),
                 ("voltage scheme 2", voltage_scheme2(1024))]:

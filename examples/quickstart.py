@@ -5,24 +5,39 @@
 import jax
 import jax.numpy as jnp
 
+from repro import cim
+from repro.cim import PlanePack
 from repro.configs import get_config
-from repro.core import cim_add, cim_boolean, cim_compare, cim_sub, edp_summary
+from repro.core import edp_summary
 from repro.models import build
 from repro.optim import AdamWConfig
 from repro.train import init_state, make_train_step
 
 
 def adra_primitives():
-    print("== ADRA single-access in-memory arithmetic ==")
+    print("== ADRA single-access in-memory arithmetic (unified CiM engine) ==")
+    print(f"backend: {cim.default_backend_name()} "
+          f"(registered: {', '.join(cim.available_backends())})")
     a = jnp.array([12, -7, 100, 3], jnp.int32)
     b = jnp.array([5, -7, 120, -3], jnp.int32)
     print("a      :", a)
     print("b      :", b)
-    print("a - b  :", cim_sub(a, b, n_bits=8).value, " (single memory access)")
-    print("a + b  :", cim_add(a, b, n_bits=8).value)
-    c = cim_compare(a, b, n_bits=8)
+    print("a - b  :", cim.sub(a, b, n_bits=8), " (single memory access)")
+    print("a + b  :", cim.add(a, b, n_bits=8))
+    c = cim.compare(a, b, n_bits=8)
     print("a <=> b: lt", c.lt, " eq", c.eq, " gt", c.gt)
-    print("a XOR b:", cim_boolean(a & 0xF, b & 0xF, "xor", n_bits=4))
+    print("a XOR b:", cim.boolean(a & 0xF, b & 0xF, "xor", n_bits=4))
+
+    # the fused request: one access yields a Boolean fn + arithmetic + compare
+    out = cim.execute(PlanePack.pack(a, 8), PlanePack.pack(b, 8),
+                      ("nand", "sub", "lt", "eq"))
+    print("one access -> nand", out["nand"].unpack(),
+          " sub", out["sub"].unpack(), " lt", out["lt"].unpack())
+    # chained packed-plane pipeline: (a - b) - b without ever unpacking
+    d1 = cim.execute(PlanePack.pack(a, 8), PlanePack.pack(b, 8), ("sub",))["sub"]
+    d2 = cim.execute(d1, PlanePack.pack(b, 8).extend_to(d1.n_bits),
+                     ("sub",))["sub"]
+    print("(a-b)-b :", d2.unpack(), " (stayed packed between ops)")
     print("\npaper-model EDP decrease per sensing scheme:")
     for scheme, row in edp_summary().items():
         print(f"  {scheme:8s}: speedup {row['speedup']:.2f}x, "

@@ -1,0 +1,45 @@
+"""repro.cim — the unified ADRA computing-in-memory engine.
+
+One asymmetric dual-row access yields {OR, AND, B} (and A via the OAI21
+gate); the engine turns that into the FULL op surface — add, sub, compare,
+carry, and all 16 two-input Boolean functions — from one streamed pass, on
+any registered backend:
+
+  opset       — the op catalogue + plane-level Boolean composition rules
+  planepack   — PlanePack pytree: packed uint32 planes + static metadata,
+                so chained ops never round-trip through pack/unpack
+  fused_kernel— the generalized single-pass Pallas TPU kernel
+  backends    — registry: pallas-tpu / pallas-interpret / jnp-boolean /
+                analog-oracle, one dispatch point for all call sites
+  engine      — execute / execute_unfused + integer-level add, sub,
+                compare, boolean wrappers + HBM traffic model/measurement
+  accounting  — per-op energy ledger wired through repro.core.energy
+
+Layering: repro.core holds the physics (device model, sensing, gate-level
+modules, calibrated energy model) and remains the semantic oracle; repro.cim
+is the execution engine every caller dispatches through.
+"""
+from . import accounting, backends, engine, opset  # noqa: F401
+from .accounting import LEDGER, Ledger, ledger, project_savings  # noqa: F401
+from .backends import (  # noqa: F401
+    available_backends,
+    default_backend_name,
+    get_backend,
+    on_tpu,
+    register_backend,
+    set_default_backend,
+)
+from .engine import (  # noqa: F401
+    CmpOut,
+    add,
+    boolean,
+    compare,
+    execute,
+    execute_unfused,
+    measured_traffic_bytes,
+    sub,
+    traffic_model_bytes,
+)
+from .fused_kernel import DEFAULT_BLOCK_W, fused_planes_op  # noqa: F401
+from .opset import ALL_OPS, ARITH_OPS, BOOLEAN_OPS, PREDICATE_OPS  # noqa: F401
+from .planepack import PlanePack, mask_to_ints  # noqa: F401

@@ -1,0 +1,105 @@
+"""PlanePack: packed bit-plane pytree — the CiM engine's working format.
+
+The ADRA array never leaves bit-serial form between operations: the output
+planes of one op are the input planes of the next. PlanePack makes that true
+on TPU too. It carries the packed uint32 plane stack (plane p = bit p of 32
+words per lane element) plus the static metadata (n_bits, signedness, logical
+shape) needed to re-assemble integers — so chained CiM ops stay packed across
+calls instead of round-tripping through pack_bitplanes/unpack_bitplanes.
+
+Registered as a JAX pytree: PlanePacks flow through jit/vmap/scan with the
+plane stack as the single traced leaf and the metadata static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import pack_bitplanes, unpack_bitplanes
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PlanePack:
+    """Packed bit-plane representation of an integer tensor.
+
+    planes : uint32[n_bits, W] — plane p, lane word w, bit j holds bit p of
+             logical element 32*w + j (LSB-first planes, two's complement).
+    n_bits : word width (number of planes).
+    signed : whether the MSB plane is a two's-complement sign plane.
+    shape  : logical tensor shape (prod(shape) = number of valid words;
+             the lane dim is padded to a multiple of 32).
+    """
+
+    planes: jax.Array
+    n_bits: int
+    signed: bool
+    shape: Tuple[int, ...]
+
+    # -- pytree protocol: planes traced, metadata static --------------------
+    def tree_flatten(self):
+        return (self.planes,), (self.n_bits, self.signed, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        n_bits, signed, shape = aux
+        return cls(planes=children[0], n_bits=n_bits, signed=signed, shape=shape)
+
+    # -- construction / materialization ------------------------------------
+    @classmethod
+    def pack(cls, x: jax.Array, n_bits: int, signed: bool = True) -> "PlanePack":
+        """Integer tensor (any shape) -> PlanePack. The ONLY place a CiM
+        pipeline pays the transpose-and-pack cost."""
+        x = jnp.asarray(x)
+        shape = tuple(x.shape)
+        return cls(planes=pack_bitplanes(x, n_bits), n_bits=n_bits,
+                   signed=signed, shape=shape)
+
+    @property
+    def n_words(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= int(d)
+        return n
+
+    def unpack(self) -> jax.Array:
+        """PlanePack -> int32 tensor of the logical shape (pipeline exit)."""
+        vals = unpack_bitplanes(self.planes, self.n_words, signed=self.signed)
+        return vals.reshape(self.shape)
+
+    # -- packed-domain transforms (no pack/unpack round trip) ---------------
+    def extend_to(self, n_bits: int) -> "PlanePack":
+        """Widen to n_bits planes entirely in the packed domain: replicate the
+        sign plane (signed) or append zero planes (unsigned). This is how a
+        chained pipeline aligns an (n+1)-bit result with an n-bit operand."""
+        if n_bits < self.n_bits:
+            raise ValueError(f"cannot narrow {self.n_bits} -> {n_bits} planes")
+        if n_bits == self.n_bits:
+            return self
+        extra = n_bits - self.n_bits
+        if self.signed:
+            fill = jnp.broadcast_to(self.planes[-1:],
+                                    (extra,) + self.planes.shape[1:])
+        else:
+            fill = jnp.zeros((extra,) + self.planes.shape[1:], jnp.uint32)
+        return PlanePack(planes=jnp.concatenate([self.planes, fill], axis=0),
+                         n_bits=n_bits, signed=self.signed, shape=self.shape)
+
+    def align(self, other: "PlanePack") -> Tuple["PlanePack", "PlanePack"]:
+        """Widen both operands to the common width, packed-domain only."""
+        n = max(self.n_bits, other.n_bits)
+        return self.extend_to(n), other.extend_to(n)
+
+
+def mask_to_ints(bitmap: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+    """uint32[1, W] per-word predicate bitmap -> int32 0/1 tensor of shape."""
+    n = 1
+    for d in shape:
+        n *= int(d)
+    w = bitmap.shape[-1]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (bitmap.reshape(w)[:, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(w * 32)[:n].astype(jnp.int32).reshape(shape)

@@ -14,6 +14,12 @@ bit-planes, run the single-access ADRA dataflow, and re-assemble. A single
 "memory access" yields OR, AND and B simultaneously — hence add, sub, compare
 and ALL 16 two-input Boolean functions each cost exactly one access, which is
 what the energy model (repro.core.energy) charges for.
+
+This module is the SEMANTIC ORACLE of the unified CiM engine (repro.cim): the
+engine's analog-oracle backend routes packed bit-planes through adra_access
+(mode="analog") and the gate-level compute modules here, validating that every
+fast backend (Pallas kernel, jnp plane math) matches what the sensed circuit
+actually computes. Production call sites should dispatch through repro.cim.
 """
 from __future__ import annotations
 

@@ -11,6 +11,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# trace-time codec call counters: the CiM engine's chained-op tests assert
+# that PlanePack pipelines never re-enter these between ops
+_CODEC_CALLS = {"pack": 0, "unpack": 0}
+
+
+def codec_call_counts() -> dict:
+    return dict(_CODEC_CALLS)
+
+
+def reset_codec_call_counts() -> None:
+    _CODEC_CALLS["pack"] = 0
+    _CODEC_CALLS["unpack"] = 0
+
 
 def int_to_bits(x: jax.Array, n_bits: int) -> jax.Array:
     """Two's-complement LSB-first bit decomposition: [...] -> [..., n_bits]."""
@@ -46,6 +59,7 @@ def pack_bitplanes(x: jax.Array, n_bits: int) -> jax.Array:
 
     Plane p, lane word w, bit position j holds bit p of element 32*w + j.
     """
+    _CODEC_CALLS["pack"] += 1
     x = jnp.asarray(x, dtype=jnp.int32).reshape(-1)
     n = x.shape[0]
     pad = (-n) % 32
@@ -58,6 +72,7 @@ def pack_bitplanes(x: jax.Array, n_bits: int) -> jax.Array:
 
 def unpack_bitplanes(planes: jax.Array, n_words: int, signed: bool = True) -> jax.Array:
     """[n_bits, W] uint32 packed planes -> [n_words] int (two's complement)."""
+    _CODEC_CALLS["unpack"] += 1
     n_bits, w = planes.shape
     shifts = jnp.arange(32, dtype=jnp.uint32)
     bits = (planes[..., None] >> shifts) & jnp.uint32(1)  # [n_bits, W, 32]

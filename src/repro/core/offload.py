@@ -74,17 +74,19 @@ def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024) -> Off
         total += int(_numel(m.group(2)) * _BYTES.get(m.group(1), 4))
     total = max(total, eligible_bytes)
 
-    res = {"current": energy.current_sensing,
-           "scheme1": energy.voltage_scheme1,
-           "scheme2": energy.voltage_scheme2}[scheme](rows)
+    # project through the CiM engine's accounting layer (same ledger math the
+    # engine charges per executed op-set); lazy import breaks the core<->cim
+    # module cycle
+    from repro.cim.accounting import project_savings
+
     words32 = eligible_bytes // 4
-    saved_internal = (res.baseline.energy - res.cim.energy) * words32
+    proj = project_savings(words32, scheme=scheme, rows=rows)
     return OffloadReport(
         eligible_ops=n_ops,
         eligible_bytes=eligible_bytes,
         total_bytes_estimate=total,
         words32=words32,
-        edp_decrease_pct=res.edp_decrease_pct,
-        energy_saved_fj=energy.to_fj(saved_internal),
+        edp_decrease_pct=proj["edp_decrease_pct"],
+        energy_saved_fj=proj["energy_saved_fj"],
         op_histogram=hist,
     )

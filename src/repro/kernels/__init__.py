@@ -1,15 +1,17 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-  adra_bitplane   — the paper's technique: single-pass fused bit-plane
-                    add/sub/compare (+ the two-pass near-memory baseline)
+  adra_bitplane   — compat shims over the generalized fused CiM kernel
+                    (the real kernel lives in repro.cim.fused_kernel and
+                    emits ANY subset of add/sub/carry/compare/Boolean ops
+                    from one streamed pass)
   flash_attention — blocked online-softmax GQA attention (prefill hot spot)
   rglru           — RG-LRU recurrence with VMEM-resident state
   slstm           — sLSTM recurrence with VMEM-RESIDENT recurrent weights
                     (kills the per-step R re-read; EXPERIMENTS §Perf B2)
 
-Each kernel ships an ops.py jit wrapper (backend dispatch) and a ref.py
-pure-jnp oracle; tests sweep shapes/dtypes asserting kernel == oracle in
-interpret mode.
+Each kernel ships an ops.py jit wrapper (backend dispatch through the
+repro.cim registry) and a ref.py pure-jnp oracle; tests sweep shapes/dtypes
+asserting kernel == oracle in interpret mode.
 """
 from . import ops, ref  # noqa: F401
 from .adra_bitplane import adra_bitplane_op, traffic_model_bytes  # noqa: F401

@@ -1,0 +1,8 @@
+"""Version-portability shims for the Pallas TPU API surface.
+
+jax renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams (~0.5); support
+both so the kernels run on whichever toolchain the container bakes in.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -1,83 +1,24 @@
-"""Pallas TPU kernel: ADRA bit-plane arithmetic in a single memory pass.
+"""Legacy entry points for the ADRA bit-plane kernel (compat shims).
 
-TPU-native adaptation of the paper's mechanism (DESIGN.md §2): integer words
-are stored as packed bit-planes (plane p = bit p of 32 words per uint32 lane
-element; the plane index plays the wordline-pair role). ONE streamed HBM->VMEM
-pass over both operand plane stacks produces — simultaneously, like the three
-sense amplifiers + compute module do — the sum/difference planes, the carry
-plane, and the lt/eq/gt comparison bitmaps, using only VPU bitwise ops.
-
-The near-memory baseline (two full accesses + compute, what the paper beats)
-is the UNFUSED execution: one pass per requested function, re-reading the
-operands each time. `benchmarks/kernel_bench.py` quantifies the traffic ratio.
-
-Layout:  a_planes, b_planes : uint32[n_bits, n_words32]
-         (n_words32 = number of 32-column groups; lane dim, multiple of 128)
-
-Grid:    1-D over word blocks; the whole bit dimension stays resident in VMEM
-         (n_bits+1 planes x block_w x 4 B ~= 33 x 512 x 4 B = 66 KiB per ref,
-         well inside the ~16 MiB v5e VMEM budget, MXU-free / pure VPU).
+The actual kernel now lives in repro.cim.fused_kernel: ONE generalized Pallas
+pass that emits any requested subset of {add, sub, carry, lt/eq/gt, all 16
+Boolean function plane stacks} — superseding the add-only/sub-only special
+cases that used to live here. These wrappers preserve the original
+(select-based) call contract for existing callers and tests; new code should
+go through repro.cim.engine / repro.cim.fused_planes_op directly.
 """
 from __future__ import annotations
 
 import functools
+import operator
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-DEFAULT_BLOCK_W = 512  # lane-dim block (multiple of 128 for VPU alignment)
-
-
-def _adra_kernel(a_ref, b_ref, select_ref, sum_ref, carry_ref, lt_ref, eq_ref):
-    """Fused single-pass ADRA pass over one word block.
-
-    a_ref/b_ref: uint32[n_bits, bw]; select_ref: int32[1,1] (0=add, 1=sub);
-    sum_ref: uint32[n_bits+1, bw] (incl. the (n+1)-th overflow-module plane);
-    carry_ref/lt_ref/eq_ref: uint32[1, bw] bitmaps.
-    """
-    n_bits = a_ref.shape[0]
-    select = select_ref[0, 0]
-    bw = a_ref.shape[1]
-    zeros = jnp.zeros((bw,), jnp.uint32)
-    ones = jnp.full((bw,), 0xFFFFFFFF, jnp.uint32)
-
-    # C_IN(0) = SELECT : A - B = A + ~B + 1
-    carry0 = jnp.where(select == 1, ones, zeros)
-    nz0 = zeros  # accumulates OR of result planes for the zero-detect AND tree
-
-    def module(i, state):
-        carry, nz = state
-        a = a_ref[i, :]
-        b = b_ref[i, :]
-        b_eff = jnp.where(select == 1, ~b, b)      # mux: B vs NOT(B)
-        half = a ^ b_eff                           # XOR / XNOR plane
-        s = half ^ carry
-        carry = (a & b_eff) | (carry & half)       # generate | propagate
-        sum_ref[i, :] = s
-        nz = nz | s
-        return carry, nz
-
-    carry, nz = jax.lax.fori_loop(0, n_bits, module, (carry0, nz0))
-
-    # (n+1)-th compute module: sign-extended inputs (paper Sec. III-B)
-    a_msb = a_ref[n_bits - 1, :]
-    b_msb = b_ref[n_bits - 1, :]
-    b_eff = jnp.where(select == 1, ~b_msb, b_msb)
-    half = a_msb ^ b_eff
-    s_ext = half ^ carry
-    carry_out = (a_msb & b_eff) | (carry & half)
-    sum_ref[n_bits, :] = s_ext
-    nz = nz | s_ext
-
-    carry_ref[0, :] = carry_out
-    lt_ref[0, :] = s_ext          # sign bit of the (n+1)-bit result => A < B
-    eq_ref[0, :] = ~nz            # AND tree over complemented SUM bits
+from repro.cim.engine import traffic_model_bytes as _traffic_model
+from repro.cim.fused_kernel import DEFAULT_BLOCK_W, fused_planes_op  # noqa: F401
 
 
-@functools.partial(
-    jax.jit, static_argnames=("select", "block_w", "interpret")
-)
 def adra_bitplane_op(
     a_planes: jax.Array,
     b_planes: jax.Array,
@@ -89,95 +30,24 @@ def adra_bitplane_op(
 
     Returns (sum_planes uint32[n_bits+1, W], carry uint32[1, W],
              lt uint32[1, W], eq uint32[1, W]).
-    lt/eq are per-column bitmaps (only meaningful for select=1).
+    lt/eq are per-column bitmaps (only meaningful for select=1; for select=0
+    they are the legacy sign/zero bitmaps of the ADD chain).
     """
-    n_bits, w = a_planes.shape
-    assert b_planes.shape == (n_bits, w)
-    if w % block_w != 0:
-        pad = (-w) % block_w
-        a_planes = jnp.pad(a_planes, ((0, 0), (0, pad)))
-        b_planes = jnp.pad(b_planes, ((0, 0), (0, pad)))
-    wp = a_planes.shape[1]
-    sel = jnp.full((1, 1), select, jnp.int32)
-
-    grid = (wp // block_w,)
-    out_shapes = (
-        jax.ShapeDtypeStruct((n_bits + 1, wp), jnp.uint32),  # sum planes
-        jax.ShapeDtypeStruct((1, wp), jnp.uint32),           # carry out
-        jax.ShapeDtypeStruct((1, wp), jnp.uint32),           # lt bitmap
-        jax.ShapeDtypeStruct((1, wp), jnp.uint32),           # eq bitmap
-    )
-    plane_spec = pl.BlockSpec((n_bits, block_w), lambda i: (0, i))
-    row_spec = pl.BlockSpec((1, block_w), lambda i: (0, i))
-    outs = pl.pallas_call(
-        _adra_kernel,
-        grid=grid,
-        in_specs=[
-            plane_spec,
-            plane_spec,
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # scalar SELECT, broadcast
-        ],
-        out_specs=(
-            pl.BlockSpec((n_bits + 1, block_w), lambda i: (0, i)),
-            row_spec,
-            row_spec,
-            row_spec,
-        ),
-        out_shape=out_shapes,
-        interpret=interpret,
-    )(a_planes, b_planes, sel)
-    sum_p, carry, lt, eq = outs
-    return sum_p[:, :w], carry[:, :w], lt[:, :w], eq[:, :w]
+    if select == 1:
+        sum_p, carry, lt, eq = fused_planes_op(
+            a_planes, b_planes, ("sub", "carry_sub", "lt", "eq"),
+            block_w=block_w, interpret=interpret)
+        return sum_p, carry, lt, eq
+    sum_p, carry = fused_planes_op(
+        a_planes, b_planes, ("add", "carry_add"),
+        block_w=block_w, interpret=interpret)
+    # legacy select=0 contract: sign/zero detect over the ADD output planes
+    lt = sum_p[-1:, :]
+    nz = functools.reduce(operator.or_, [sum_p[i] for i in range(sum_p.shape[0])])
+    eq = (~nz)[None, :]
+    return sum_p, carry, lt, eq
 
 
-# ---------------------------------------------------------------------------
-# The near-memory baseline: one pass PER function (two full accesses each in
-# the paper's cycle accounting; in TPU terms, operands re-streamed per output).
-# ---------------------------------------------------------------------------
-
-
-def _sub_only_kernel(a_ref, b_ref, sum_ref):
-    n_bits = a_ref.shape[0]
-    bw = a_ref.shape[1]
-    carry0 = jnp.full((bw,), 0xFFFFFFFF, jnp.uint32)
-
-    def module(i, carry):
-        a = a_ref[i, :]
-        nb = ~b_ref[i, :]
-        half = a ^ nb
-        sum_ref[i, :] = half ^ carry
-        return (a & nb) | (carry & half)
-
-    carry = jax.lax.fori_loop(0, n_bits, module, carry0)
-    a_msb = a_ref[n_bits - 1, :]
-    nb_msb = ~b_ref[n_bits - 1, :]
-    half = a_msb ^ nb_msb
-    sum_ref[n_bits, :] = half ^ carry
-
-
-def _cmp_only_kernel(a_ref, b_ref, lt_ref, eq_ref):
-    n_bits = a_ref.shape[0]
-    bw = a_ref.shape[1]
-    carry0 = jnp.full((bw,), 0xFFFFFFFF, jnp.uint32)
-    nz0 = jnp.zeros((bw,), jnp.uint32)
-
-    def module(i, state):
-        carry, nz = state
-        a = a_ref[i, :]
-        nb = ~b_ref[i, :]
-        half = a ^ nb
-        return (a & nb) | (carry & half), nz | (half ^ carry)
-
-    carry, nz = jax.lax.fori_loop(0, n_bits, module, (carry0, nz0))
-    a_msb = a_ref[n_bits - 1, :]
-    nb_msb = ~b_ref[n_bits - 1, :]
-    half = a_msb ^ nb_msb
-    s_ext = half ^ carry
-    lt_ref[0, :] = s_ext
-    eq_ref[0, :] = ~(nz | s_ext)
-
-
-@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
 def baseline_bitplane_sub_then_cmp(
     a_planes: jax.Array,
     b_planes: jax.Array,
@@ -186,47 +56,18 @@ def baseline_bitplane_sub_then_cmp(
 ):
     """Near-memory baseline: subtraction pass, then a SEPARATE comparison pass
     (operands re-read — the second memory access of the paper's baseline)."""
-    n_bits, w = a_planes.shape
-    pad = (-w) % block_w
-    if pad:
-        a_planes = jnp.pad(a_planes, ((0, 0), (0, pad)))
-        b_planes = jnp.pad(b_planes, ((0, 0), (0, pad)))
-    wp = a_planes.shape[1]
-    grid = (wp // block_w,)
-    plane_spec = pl.BlockSpec((n_bits, block_w), lambda i: (0, i))
-    row_spec = pl.BlockSpec((1, block_w), lambda i: (0, i))
-
-    sum_p = pl.pallas_call(
-        _sub_only_kernel,
-        grid=grid,
-        in_specs=[plane_spec, plane_spec],
-        out_specs=pl.BlockSpec((n_bits + 1, block_w), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((n_bits + 1, wp), jnp.uint32),
-        interpret=interpret,
-    )(a_planes, b_planes)
-
-    lt, eq = pl.pallas_call(
-        _cmp_only_kernel,
-        grid=grid,
-        in_specs=[plane_spec, plane_spec],
-        out_specs=(row_spec, row_spec),
-        out_shape=(
-            jax.ShapeDtypeStruct((1, wp), jnp.uint32),
-            jax.ShapeDtypeStruct((1, wp), jnp.uint32),
-        ),
-        interpret=interpret,
-    )(a_planes, b_planes)
-    return sum_p[:, :w], lt[:, :w], eq[:, :w]
+    (sum_p,) = fused_planes_op(a_planes, b_planes, ("sub",),
+                               block_w=block_w, interpret=interpret)
+    lt, eq = fused_planes_op(a_planes, b_planes, ("lt", "eq"),
+                             block_w=block_w, interpret=interpret)
+    return sum_p, lt, eq
 
 
 def traffic_model_bytes(n_bits: int, n_words32: int) -> dict:
     """HBM traffic (bytes) of fused-ADRA vs per-function baseline passes.
 
-    The memory-roofline analogue of the paper's one-vs-two access argument."""
-    plane_bytes = 4 * n_words32
-    ops_in = 2 * n_bits * plane_bytes                  # read A + B stacks
-    sum_out = (n_bits + 1) * plane_bytes
-    maps_out = 3 * plane_bytes
-    fused = ops_in + sum_out + maps_out
-    baseline = (ops_in + sum_out) + (ops_in + 2 * plane_bytes)  # sub pass + cmp pass
-    return {"fused": fused, "baseline": baseline, "ratio": baseline / fused}
+    Legacy two-pass shape (sub+carry+cmp fused vs sub pass then cmp pass);
+    the generalized model is repro.cim.traffic_model_bytes."""
+    return _traffic_model(
+        n_bits, n_words32, ops=("sub", "carry_sub", "lt", "eq"),
+        baseline_passes=(("sub",), ("lt", "eq")))

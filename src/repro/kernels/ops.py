@@ -1,81 +1,77 @@
 """Jitted public wrappers for the Pallas kernels, with backend dispatch.
 
-On TPU the Pallas implementations run natively; elsewhere they run in
-interpret mode (tests/benchmarks) or fall back to the pure-jnp reference
-(dry-run lowering), so every call site is portable.
+ADRA integer ops route through the unified CiM engine (repro.cim): backend
+resolution comes from the registry (pallas-tpu on TPU, jnp-boolean elsewhere,
+REPRO_CIM_BACKEND / set_default_backend to override) instead of ad-hoc
+platform checks. The legacy `interpret` flag maps onto the pallas-interpret /
+pallas-tpu backends for callers that pin the Pallas path explicitly.
+
+Attention / recurrence wrappers keep the same dispatch idea: Pallas on TPU,
+interpret mode in tests, pure-jnp reference for dry-run lowering.
 """
 from __future__ import annotations
 
-import functools
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.bitplane import pack_bitplanes, unpack_bitplanes
+from repro.cim import PlanePack, execute, execute_unfused, on_tpu
+from repro.cim.planepack import mask_to_ints
 from . import ref
-from .adra_bitplane import adra_bitplane_op, baseline_bitplane_sub_then_cmp
+from .adra_bitplane import adra_bitplane_op, baseline_bitplane_sub_then_cmp  # noqa: F401
 from .flash_attention import flash_attention as _flash
 from .rglru import rglru as _rglru
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _resolve_backend(interpret: Optional[bool], backend: Optional[str]) -> Optional[str]:
+    """Map the legacy interpret flag to a registry backend name.
+
+    None/None defers to the registry default (platform- or env-resolved)."""
+    if backend is not None:
+        return backend
+    if interpret is None:
+        return None
+    return "pallas-interpret" if interpret else "pallas-tpu"
 
 
 # ---------------------------------------------------------------------------
-# ADRA integer ops over packed bit-planes
+# ADRA integer ops through the CiM engine
 # ---------------------------------------------------------------------------
 
 
-def adra_sub(a: jax.Array, b: jax.Array, n_bits: int = 16, interpret: bool | None = None):
+def adra_sub(a: jax.Array, b: jax.Array, n_bits: int = 16,
+             interpret: bool | None = None, backend: str | None = None):
     """Fused single-pass subtraction + comparison over integer arrays.
 
     Returns (diff int32[...], lt int32[...], eq int32[...]).
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    shape = a.shape
-    n = int(jnp.size(a)) if not hasattr(a, "size") else a.size
-    ap = pack_bitplanes(a, n_bits)
-    bp = pack_bitplanes(b, n_bits)
-    sum_p, _carry, lt, eq = adra_bitplane_op(ap, bp, select=1, interpret=interpret)
-    diff = unpack_bitplanes(sum_p, n, signed=True)
-    lt_bits = unpack_bits_mask(lt, n)
-    eq_bits = unpack_bits_mask(eq, n)
-    return diff.reshape(shape), lt_bits.reshape(shape), eq_bits.reshape(shape)
+    bk = _resolve_backend(interpret, backend)
+    out = execute(PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits),
+                  ("sub", "lt", "eq"), backend=bk)
+    return out["sub"].unpack(), out["lt"].unpack(), out["eq"].unpack()
 
 
-def adra_add(a: jax.Array, b: jax.Array, n_bits: int = 16, interpret: bool | None = None):
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    shape = a.shape
-    n = a.size
-    ap = pack_bitplanes(a, n_bits)
-    bp = pack_bitplanes(b, n_bits)
-    sum_p, _c, _l, _e = adra_bitplane_op(ap, bp, select=0, interpret=interpret)
-    return unpack_bitplanes(sum_p, n, signed=True).reshape(shape)
+def adra_add(a: jax.Array, b: jax.Array, n_bits: int = 16,
+             interpret: bool | None = None, backend: str | None = None):
+    bk = _resolve_backend(interpret, backend)
+    out = execute(PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits),
+                  ("add",), backend=bk)
+    return out["add"].unpack()
 
 
 def unpack_bits_mask(bitmap: jax.Array, n: int) -> jax.Array:
-    """uint32[1, W] bitmap -> int32[n] of 0/1."""
-    w = bitmap.shape[-1]
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    bits = (bitmap.reshape(w)[:, None] >> shifts) & jnp.uint32(1)
-    return bits.reshape(w * 32)[:n].astype(jnp.int32)
+    """uint32[1, W] bitmap -> int32[n] of 0/1 (compat; see planepack)."""
+    return mask_to_ints(bitmap, (n,))
 
 
 def baseline_sub_then_cmp(a: jax.Array, b: jax.Array, n_bits: int = 16,
-                          interpret: bool | None = None):
+                          interpret: bool | None = None,
+                          backend: str | None = None):
     """The paper's near-memory baseline: separate passes (for benchmarks)."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    shape = a.shape
-    n = a.size
-    ap = pack_bitplanes(a, n_bits)
-    bp = pack_bitplanes(b, n_bits)
-    sum_p, lt, eq = baseline_bitplane_sub_then_cmp(ap, bp, interpret=interpret)
-    return (
-        unpack_bitplanes(sum_p, n, signed=True).reshape(shape),
-        unpack_bits_mask(lt, n).reshape(shape),
-        unpack_bits_mask(eq, n).reshape(shape),
-    )
+    bk = _resolve_backend(interpret, backend)
+    out = execute_unfused(PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits),
+                          (("sub",), ("lt", "eq")), backend=bk)
+    return out["sub"].unpack(), out["lt"].unpack(), out["eq"].unpack()
 
 
 # ---------------------------------------------------------------------------
@@ -86,16 +82,16 @@ def baseline_sub_then_cmp(a: jax.Array, b: jax.Array, n_bits: int = 16,
 def attention(q, k, v, causal: bool = True, use_pallas: bool | None = None,
               interpret: bool = False):
     """GQA attention: Pallas flash kernel on TPU, jnp reference elsewhere."""
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
     if use_pallas or interpret:
-        return _flash(q, k, v, causal=causal, interpret=interpret or not _on_tpu())
+        return _flash(q, k, v, causal=causal, interpret=interpret or not on_tpu())
     return ref.mha_ref(q, k, v, causal=causal)
 
 
 def rglru_scan(x, r, i, log_lambda, h0=None, c: float = 8.0,
                use_pallas: bool | None = None, interpret: bool = False):
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
     if use_pallas or interpret:
         return _rglru(x, r, i, log_lambda, h0=h0, c=c,
-                      interpret=interpret or not _on_tpu())
+                      interpret=interpret or not on_tpu())
     return ref.rglru_ref(x, r, i, log_lambda, h0=h0, c=c)

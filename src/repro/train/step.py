@@ -120,9 +120,11 @@ def greedy_sample(logits: jax.Array) -> jax.Array:
 def adra_sample(logits: jax.Array, n_bits: int = 8) -> jax.Array:
     """Quantized argmax through the ADRA comparison primitive: logits are
     quantized to n_bits and the winner found with single-access in-memory
-    comparisons (a reduction tree of cim_compare) — the serving-path
-    integration of the paper's technique."""
-    from repro.core import cim_compare
+    comparisons (a reduction tree of engine compares) — the serving-path
+    integration of the paper's technique. Dispatches through the unified CiM
+    engine, so the backend (Pallas kernel on TPU, jnp plane math elsewhere)
+    follows the registry default."""
+    from repro.cim import compare as cim_compare
 
     x = logits.astype(jnp.float32)
     # padded-vocab columns are -inf-masked: clamp them to the finite floor so

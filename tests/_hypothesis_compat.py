@@ -1,0 +1,57 @@
+"""Import-or-fallback shim for hypothesis.
+
+hypothesis is an OPTIONAL dev dependency (see requirements-dev.txt). When it
+is installed, this module re-exports the real `given`/`settings`/`st`. When
+it is not, property tests fall back to deterministic seeded-numpy
+parametrization: each @given test runs N_EXAMPLES times, drawing every
+strategy from a per-example np.random.RandomState — weaker shrinking, same
+coverage shape, zero extra dependencies.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+    import pytest as _pytest
+
+    N_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.randint(0, 2)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elements.draw(rng)
+                for _ in range(int(rng.randint(min_size, max_size + 1)))])
+
+    def settings(*_args, **_kwargs):
+        def deco(f):
+            return f
+        return deco
+
+    def given(*strategies):
+        def deco(f):
+            def wrapper(_hyp_seed):
+                rng = _np.random.RandomState(0xADAA ^ _hyp_seed)
+                f(*[s.draw(rng) for s in strategies])
+
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return _pytest.mark.parametrize(
+                "_hyp_seed", range(N_EXAMPLES))(wrapper)
+        return deco

@@ -1,0 +1,269 @@
+"""Unified CiM engine: backend parity for the FULL op surface, packed-plane
+chaining with zero intermediate pack/unpack, traffic accounting, registry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cim
+from repro.cim import PlanePack
+from repro.core import bitplane
+
+#: every backend that runs on a CPU host (pallas-tpu needs real hardware)
+BACKENDS = ("pallas-interpret", "jnp-boolean", "analog-oracle")
+
+RNG = np.random.RandomState(7)
+
+
+def _pair(n_bits, n):
+    lo, hi = -(2 ** (n_bits - 1)), 2 ** (n_bits - 1)
+    a = jnp.array(RNG.randint(lo, hi, n), jnp.int32)
+    b = jnp.array(RNG.randint(lo, hi, n), jnp.int32)
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# backend parity: arithmetic + comparison
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n_bits,n", [(4, 48), (8, 70)])
+def test_add_sub_compare_parity(backend, n_bits, n):
+    a, b = _pair(n_bits, n)
+    an, bn = np.array(a), np.array(b)
+    np.testing.assert_array_equal(
+        np.array(cim.add(a, b, n_bits, backend=backend)), an + bn)
+    np.testing.assert_array_equal(
+        np.array(cim.sub(a, b, n_bits, backend=backend)), an - bn)
+    c = cim.compare(a, b, n_bits, backend=backend)
+    np.testing.assert_array_equal(np.array(c.lt), (an < bn).astype(np.int32))
+    np.testing.assert_array_equal(np.array(c.eq), (an == bn).astype(np.int32))
+    np.testing.assert_array_equal(np.array(c.gt), (an > bn).astype(np.int32))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("fn", cim.BOOLEAN_OPS)
+def test_all_16_boolean_functions_every_backend(backend, fn):
+    """Every Boolean function, on every registered backend, from one access."""
+    n_bits, m = 4, 15
+    A = jnp.arange(16, dtype=jnp.int32)
+    AA, BB = [x.ravel() for x in jnp.meshgrid(A, A, indexing="ij")]
+    a, b = np.array(AA), np.array(BB)
+    ref = {
+        "false": np.zeros_like(a), "true": np.full_like(a, m),
+        "and": a & b, "or": a | b, "xor": a ^ b,
+        "nand": (~(a & b)) & m, "nor": (~(a | b)) & m, "xnor": (~(a ^ b)) & m,
+        "a": a, "b": b, "not_a": (~a) & m, "not_b": (~b) & m,
+        "a_and_not_b": a & ((~b) & m), "not_a_and_b": ((~a) & m) & b,
+        "a_or_not_b": a | ((~b) & m), "not_a_or_b": ((~a) & m) | b,
+    }[fn]
+    got = np.array(cim.boolean(AA, BB, fn, n_bits, backend=backend))
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_multi_op_single_access(backend):
+    """Boolean + sub + compare + carries, ONE access, matches semantics."""
+    a, b = _pair(8, 64)
+    an, bn = np.array(a), np.array(b)
+    out = cim.execute(PlanePack.pack(a, 8), PlanePack.pack(b, 8),
+                      ("xor", "sub", "add", "lt", "eq", "gt",
+                       "carry_add", "carry_sub"), backend=backend)
+    np.testing.assert_array_equal(np.array(out["xor"].unpack()),
+                                  (an & 0xFF) ^ (bn & 0xFF))
+    np.testing.assert_array_equal(np.array(out["sub"].unpack()), an - bn)
+    np.testing.assert_array_equal(np.array(out["add"].unpack()), an + bn)
+    np.testing.assert_array_equal(np.array(out["lt"].unpack()),
+                                  (an < bn).astype(np.int32))
+    np.testing.assert_array_equal(np.array(out["eq"].unpack()),
+                                  (an == bn).astype(np.int32))
+    np.testing.assert_array_equal(np.array(out["gt"].unpack()),
+                                  (an > bn).astype(np.int32))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_unsigned_operands_not_misread_as_negative(backend):
+    """Unsigned packs with the top bit set: the engine must zero-extend before
+    the two's-complement ripple, not let the overflow module sign-extend."""
+    a = jnp.array([0, 255, 200, 7], jnp.int32)
+    b = jnp.array([200, 1, 200, 255], jnp.int32)
+    pa = PlanePack.pack(a, 8, signed=False)
+    pb = PlanePack.pack(b, 8, signed=False)
+    out = cim.execute(pa, pb, ("sub", "add", "lt", "eq", "gt"), backend=backend)
+    an, bn = np.array(a), np.array(b)
+    np.testing.assert_array_equal(np.array(out["sub"].unpack()), an - bn)
+    np.testing.assert_array_equal(np.array(out["add"].unpack()), an + bn)
+    np.testing.assert_array_equal(np.array(out["lt"].unpack()),
+                                  (an < bn).astype(np.int32))
+    np.testing.assert_array_equal(np.array(out["eq"].unpack()),
+                                  (an == bn).astype(np.int32))
+    np.testing.assert_array_equal(np.array(out["gt"].unpack()),
+                                  (an > bn).astype(np.int32))
+
+
+def test_chained_boolean_result_into_arithmetic():
+    """Engine Boolean outputs are unsigned packs; chaining one into a sub
+    must treat it as a magnitude, packed end to end."""
+    a = jnp.array(RNG.randint(0, 256, 64), jnp.int32)
+    b = jnp.array(RNG.randint(0, 256, 64), jnp.int32)
+    c = jnp.array(RNG.randint(0, 256, 64), jnp.int32)
+    pa = PlanePack.pack(a, 8, signed=False)
+    pb = PlanePack.pack(b, 8, signed=False)
+    pc = PlanePack.pack(c, 8, signed=False)
+    or_ = cim.execute(pa, pb, ("or",), backend="jnp-boolean")["or"]
+    assert not or_.signed
+    d = cim.execute(or_, pc, ("sub",), backend="jnp-boolean")["sub"]
+    np.testing.assert_array_equal(np.array(d.unpack()),
+                                  (np.array(a) | np.array(b)) - np.array(c))
+
+
+def test_unfused_baseline_matches_fused():
+    a, b = _pair(8, 100)
+    fused = cim.execute(PlanePack.pack(a, 8), PlanePack.pack(b, 8),
+                        ("sub", "lt", "eq"), backend="jnp-boolean")
+    unfused = cim.execute_unfused(PlanePack.pack(a, 8), PlanePack.pack(b, 8),
+                                  (("sub",), ("lt", "eq")),
+                                  backend="jnp-boolean")
+    for op in ("sub", "lt", "eq"):
+        np.testing.assert_array_equal(np.array(fused[op].unpack()),
+                                      np.array(unfused[op].unpack()))
+
+
+# ---------------------------------------------------------------------------
+# PlanePack: chaining without repacking
+# ---------------------------------------------------------------------------
+
+
+def test_planepack_roundtrip_shapes():
+    x = jnp.array(RNG.randint(-100, 100, (3, 5, 4)), jnp.int32)
+    p = PlanePack.pack(x, 8)
+    assert p.planes.dtype == jnp.uint32
+    assert p.shape == (3, 5, 4) and p.n_words == 60
+    np.testing.assert_array_equal(np.array(p.unpack()), np.array(x))
+
+
+def test_planepack_extend_preserves_value():
+    x = jnp.array([-7, 0, 5, -128, 127], jnp.int32)
+    p = PlanePack.pack(x, 8).extend_to(12)
+    assert p.n_bits == 12
+    np.testing.assert_array_equal(np.array(p.unpack()), np.array(x))
+    u = PlanePack.pack(jnp.array([3, 9], jnp.int32), 4, signed=False).extend_to(9)
+    np.testing.assert_array_equal(np.array(u.unpack()), [3, 9])
+
+
+def test_chained_ops_zero_intermediate_pack_unpack():
+    """(a - b) - c stays in the packed-plane domain: the codec is entered
+    exactly once per operand at entry and once at exit, never between ops."""
+    a, b = _pair(8, 64)
+    c = jnp.array(RNG.randint(-100, 100, 64), jnp.int32)
+    pa, pb, pc = (PlanePack.pack(v, 8) for v in (a, b, c))
+
+    bitplane.reset_codec_call_counts()
+    d1 = cim.execute(pa, pb, ("sub",), backend="jnp-boolean")["sub"]
+    d2 = cim.execute(d1, pc.extend_to(d1.n_bits), ("sub",),
+                     backend="jnp-boolean")["sub"]
+    assert bitplane.codec_call_counts() == {"pack": 0, "unpack": 0}
+    np.testing.assert_array_equal(np.array(d2.unpack()),
+                                  np.array(a) - np.array(b) - np.array(c))
+
+
+def test_chained_pipeline_jaxpr_has_no_codec_ops():
+    """The traced two-op pipeline contains no pack/unpack computation: the
+    codecs lower to weighted reduce_sum / shift chains, neither of which may
+    appear between chained engine calls."""
+    a, b = _pair(8, 64)
+    c = jnp.array(RNG.randint(-100, 100, 64), jnp.int32)
+    pa, pb, pc = (PlanePack.pack(v, 8) for v in (a, b, c))
+
+    def chain(pa, pb, pc):
+        d1 = cim.execute(pa, pb, ("sub",), backend="jnp-boolean")["sub"]
+        return cim.execute(d1, pc.extend_to(d1.n_bits), ("sub",),
+                           backend="jnp-boolean")["sub"]
+
+    text = str(jax.make_jaxpr(chain)(pa, pb, pc))
+    assert "reduce_sum" not in text and "shift_right" not in text
+
+
+# ---------------------------------------------------------------------------
+# traffic + accounting: the one-access argument, quantified
+# ---------------------------------------------------------------------------
+
+
+def test_fused_traffic_ratio_exceeds_1p5():
+    """Acceptance: Boolean fn + subtraction + comparison from one streamed
+    pass moves > 1.5x less HBM traffic than per-function baseline passes."""
+    t = cim.traffic_model_bytes(
+        16, 4096, ops=("xor", "sub", "lt", "eq"),
+        baseline_passes=(("xor",), ("sub",), ("lt", "eq")))
+    assert t["ratio"] > 1.5, t
+
+    a, b = _pair(16, 2048)
+    m = cim.measured_traffic_bytes(
+        PlanePack.pack(a, 16), PlanePack.pack(b, 16),
+        ("xor", "sub", "lt", "eq"),
+        baseline_passes=(("xor",), ("sub",), ("lt", "eq")),
+        backend="jnp-boolean")
+    assert m["ratio"] > 1.5, m
+
+
+def test_legacy_traffic_model_compat():
+    from repro.kernels.adra_bitplane import traffic_model_bytes
+    t = traffic_model_bytes(n_bits=16, n_words32=4096)
+    assert t["baseline"] > t["fused"] and t["ratio"] > 1.4
+
+
+def test_energy_ledger_charges_single_access():
+    led = cim.ledger()
+    led.reset()
+    a, b = _pair(8, 64)
+    cim.execute(PlanePack.pack(a, 8), PlanePack.pack(b, 8),
+                ("sub", "lt", "eq"), backend="jnp-boolean")
+    assert led.accesses == 1            # fused: ONE access for three ops
+    cim.execute_unfused(PlanePack.pack(a, 8), PlanePack.pack(b, 8),
+                        (("sub",), ("lt", "eq")), backend="jnp-boolean")
+    assert led.accesses == 3            # baseline: one per pass
+    proj = led.projected()
+    assert proj["energy_saved"] > 0 and proj["edp_decrease_pct"] > 60
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_backend_registry_contents_and_errors():
+    names = cim.available_backends()
+    for required in ("pallas-tpu", "pallas-interpret", "jnp-boolean",
+                     "analog-oracle"):
+        assert required in names
+    with pytest.raises(KeyError):
+        cim.get_backend("no-such-backend")
+    with pytest.raises(ValueError):
+        cim.execute(PlanePack.pack(jnp.arange(4), 4),
+                    PlanePack.pack(jnp.arange(4), 4), ("bogus-op",))
+
+
+def test_default_backend_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_CIM_BACKEND", "jnp-boolean")
+    assert cim.default_backend_name() == "jnp-boolean"
+    monkeypatch.delenv("REPRO_CIM_BACKEND")
+    cim.set_default_backend("analog-oracle")
+    try:
+        assert cim.default_backend_name() == "analog-oracle"
+    finally:
+        cim.set_default_backend(None)
+
+
+def test_ops_wrappers_dispatch_through_engine():
+    """kernels.ops keeps its legacy contract on top of the engine."""
+    from repro.kernels import ops
+
+    a, b = _pair(8, 130)
+    an, bn = np.array(a), np.array(b)
+    d, lt, eq = ops.adra_sub(a, b, n_bits=8)          # registry default
+    np.testing.assert_array_equal(np.array(d), an - bn)
+    np.testing.assert_array_equal(np.array(lt), (an < bn).astype(np.int32))
+    np.testing.assert_array_equal(np.array(eq), (an == bn).astype(np.int32))
+    s = ops.adra_add(a, b, n_bits=9, interpret=True)  # pinned Pallas path
+    np.testing.assert_array_equal(np.array(s), an + bn)
