@@ -1,15 +1,21 @@
-"""CiM engine benchmark: ONE fused pass vs per-function baseline passes —
-the TPU translation of the paper's one-vs-two memory access argument,
-generalized to the full op surface.
+"""CiM engine + macro-op benchmark: fused passes and planned schedules vs
+near-memory baselines — the TPU translation of the paper's one-vs-two memory
+access argument, generalized to the full op surface and to multi-access
+macro ops (multiply, int8 matmul).
 
-The fused engine computes a Boolean function + subtraction + comparison from
-a single streamed pass over both plane stacks; the near-memory baseline
-re-reads the operands once per function. Reports (a) the modeled and the
-MEASURED (actual buffer bytes) HBM traffic ratio, (b) wall-time of fused vs
-unfused execution on this host's portable backend, and (c) the projected
-ADRA-array energy for the same op counts from the calibrated paper model,
-via the engine's accounting ledger.
+Sections:
+  engine — ONE fused pass (Boolean fn + sub + compare) vs per-function
+    baseline passes: modeled and MEASURED HBM traffic, wall time, and the
+    ledger's projected ADRA-array energy.
+  macro — the planner's multiply / matmul schedules: access counts (asserted
+    equal to the ledger's), and fused (intermediates stay in-array) vs
+    unfused (operands re-streamed per scheduled access) traffic.
+
+`--json [PATH]` additionally writes the metrics as BENCH_kernel.json for CI
+artifact tracking of the perf trajectory per PR.
 """
+import argparse
+import json
 import time
 
 import jax
@@ -17,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import cim
-from repro.cim import PlanePack
+from repro.cim import PlanePack, planner
 
 #: the fused request: Boolean fn + subtraction + comparison, one access
 FUSED_OPS = ("xor", "sub", "lt", "eq")
@@ -35,7 +41,7 @@ def _time(fn, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def main():
+def engine_section(metrics):
     n_bits, n_words = 16, 1 << 20
     rng = np.random.RandomState(0)
     a = jnp.array(rng.randint(-2**15, 2**15, n_words), jnp.int32)
@@ -54,6 +60,11 @@ def main():
     print(f"kernel_traffic_measured_ratio,{n_words},{m['ratio']:.3f},"
           f"actual buffer bytes, >1.5 required")
     assert m["ratio"] > 1.5, m
+    metrics["engine"] = {
+        "n_words": n_words,
+        "traffic_model": t,
+        "traffic_measured": m,
+    }
 
     # wall time of fused vs unfused on the portable backend (host sanity,
     # not TPU perf; interpret-mode Pallas is not a performance proxy)
@@ -65,6 +76,8 @@ def main():
     us_u = _time(unfused)
     print(f"kernel_fused_us,{n_words},{us_f:.1f},jnp-boolean backend on host")
     print(f"kernel_unfused_us,{n_words},{us_u:.1f},per-function passes")
+    metrics["engine"]["fused_us"] = us_f
+    metrics["engine"]["unfused_us"] = us_u
 
     # projected ADRA-array energy via the engine ledger (paper model)
     led = cim.ledger()
@@ -81,7 +94,99 @@ def main():
           f"{fused_proj['energy_saved_fj']:.0f},current sensing @1024^2")
     print(f"kernel_projected_edp_decrease_pct,{n_words},"
           f"{fused_proj['edp_decrease_pct']:.2f},")
+    metrics["engine"]["ledger_access_energy_ratio"] = ratio
+    metrics["engine"]["projected_energy_saved_fj"] = fused_proj["energy_saved_fj"]
+    metrics["engine"]["projected_edp_decrease_pct"] = fused_proj["edp_decrease_pct"]
+
+
+def macro_section(metrics):
+    """The planner's schedules: access counts + fused-vs-unfused traffic."""
+    rng = np.random.RandomState(1)
+    led = cim.ledger()
+
+    # -- multiply: 8x8 shift-and-add over 2^16 words -----------------------
+    n_bits, n_words = 8, 1 << 16
+    a = jnp.array(rng.randint(-128, 128, n_words), jnp.int32)
+    b = jnp.array(rng.randint(-128, 128, n_words), jnp.int32)
+    pa, pb = PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits)
+    sched = planner.plan_multiply(n_bits, n_bits)
+    led.reset()
+    prod = cim.multiply(pa, pb, backend="jnp-boolean")
+    assert led.accesses == sched.accesses, (led.accesses, sched.accesses)
+    np.testing.assert_array_equal(np.array(prod.unpack()),
+                                  np.array(a) * np.array(b))
+    t = planner.schedule_traffic_bytes(sched, n_bits, pa.planes.shape[1])
+    print(f"macro_multiply_accesses,{n_words},{sched.accesses},"
+          f"ledger-verified shift-and-add schedule")
+    print(f"macro_multiply_traffic_fused_bytes,{n_words},{t['fused']:.0f},"
+          f"operands once, intermediates in-array")
+    print(f"macro_multiply_traffic_unfused_bytes,{n_words},{t['baseline']:.0f},"
+          f"operands re-streamed per access")
+    print(f"macro_multiply_traffic_ratio,{n_words},{t['ratio']:.3f},"
+          f">1.5 required")
+    assert t["ratio"] > 1.5, t
+    metrics["macro_multiply"] = {
+        "n_words": n_words,
+        "accesses": sched.accesses,
+        "ledger_accesses": led.accesses,
+        "traffic": t,
+    }
+
+    # -- int8 matmul: planned contraction, access count vs ledger ----------
+    m_, k_, n_ = 16, 32, 8
+    A = jnp.array(rng.randint(-128, 128, (m_, k_)), jnp.int32)
+    B = jnp.array(rng.randint(-128, 128, (k_, n_)), jnp.int32)
+    msched = planner.plan_matmul(k_, n_, n_bits=8)
+    led.reset()
+    t0 = time.perf_counter()
+    C = cim.matmul(A, B, n_bits=8, backend="jnp-boolean")
+    ms = (time.perf_counter() - t0) * 1e3
+    assert led.accesses == msched.accesses, (led.accesses, msched.accesses)
+    np.testing.assert_array_equal(
+        np.array(C), np.array(A, np.int64) @ np.array(B, np.int64))
+    mt = planner.schedule_traffic_bytes(
+        msched, 2 * 8, (m_ * k_ * n_ + 31) // 32, working_bits=msched.out_bits)
+    print(f"macro_matmul_accesses,{m_}x{k_}x{n_},{msched.accesses},"
+          f"(2n-1)+log2(K_pad): independent of M and N")
+    print(f"macro_matmul_traffic_ratio,{m_}x{k_}x{n_},{mt['ratio']:.3f},"
+          f"fused schedule vs per-access re-streaming")
+    print(f"macro_matmul_ms,{m_}x{k_}x{n_},{ms:.1f},jnp-boolean host walltime")
+    metrics["macro_matmul"] = {
+        "shape": [m_, k_, n_],
+        "accesses": msched.accesses,
+        "ledger_accesses": led.accesses,
+        "traffic": mt,
+        "walltime_ms": ms,
+    }
+
+    # projected array energy for the macro ops just charged
+    proj = led.projected(scheme="current")
+    print(f"macro_projected_edp_decrease_pct,{m_}x{k_}x{n_},"
+          f"{proj['edp_decrease_pct']:.2f},")
+    metrics["macro_matmul"]["projected_edp_decrease_pct"] = proj["edp_decrease_pct"]
+
+
+def main(argv=()):
+    # argv defaults to () so programmatic callers (benchmarks.run) never
+    # inherit the host process's CLI; __main__ passes sys.argv explicitly
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_kernel.json",
+                    default=None, metavar="PATH",
+                    help="also write metrics to PATH (default BENCH_kernel.json)")
+    args = ap.parse_args(list(argv))
+
+    metrics = {}
+    engine_section(metrics)
+    macro_section(metrics)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+        print(f"bench_json_written,,{args.json},access counts + traffic ratios")
+    return metrics
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(sys.argv[1:])

@@ -73,7 +73,30 @@ led = cim.ledger()
 print(f"   ledger: {led.accesses} accesses charged, "
       f"projected EDP -{led.projected()['edp_decrease_pct']:.1f}%")
 
-print("\n6) energy/latency model (calibrated to the paper's SPICE anchors):")
+print("\n6) macro-op planner: multi-access arithmetic as access schedules:")
+from repro.cim import planner
+
+mul_plan = planner.plan_multiply(8, 8)
+print(f"   multiply 8x8 plan: {mul_plan.accesses} accesses "
+      f"{[s.ops[0] for s in mul_plan.steps]}")
+led.reset()
+prod = cim.multiply(PlanePack.pack(x, 8), PlanePack.pack(y, 8),
+                    backend="jnp-boolean")
+print(f"   x*y={np.array(prod.unpack())}  (ledger charged {led.accesses} "
+      f"accesses = plan length)")
+t = planner.schedule_traffic_bytes(mul_plan, 8, prod.planes.shape[1])
+print(f"   fused schedule traffic {t['fused']:.0f} B vs unfused "
+      f"{t['baseline']:.0f} B -> {t['ratio']:.1f}x (intermediates stay in-array)")
+A = jnp.array([[1, -2, 3], [4, 5, -6]], jnp.int32)
+B = jnp.array([[7, -8], [9, 10], [-11, 12]], jnp.int32)
+mm_plan = planner.plan_matmul(3, 2, n_bits=8)
+led.reset()
+C = cim.matmul(A, B, n_bits=8, backend="jnp-boolean")
+print(f"   int8 matmul [2,3]x[3,2] -> {np.array(C).tolist()} in "
+      f"{led.accesses} accesses (plan {mm_plan.accesses}; "
+      f"independent of M and N)")
+
+print("\n7) energy/latency model (calibrated to the paper's SPICE anchors):")
 for name, r in [("current sensing", current_sensing(1024)),
                 ("voltage scheme 1", voltage_scheme1(1024)),
                 ("voltage scheme 2", voltage_scheme2(1024))]:

@@ -38,6 +38,19 @@ def adra_primitives():
     d2 = cim.execute(d1, PlanePack.pack(b, 8).extend_to(d1.n_bits),
                      ("sub",))["sub"]
     print("(a-b)-b :", d2.unpack(), " (stayed packed between ops)")
+
+    # macro ops: the planner lowers multi-access arithmetic to explicit
+    # schedules of single accesses; the ledger charges exactly the plan
+    print("a * b  :", cim.multiply(PlanePack.pack(a, 8),
+                                   PlanePack.pack(b, 8)).unpack(),
+          f" ({cim.plan_multiply(8, 8).accesses} accesses, shift-and-add)")
+    print("relu(a):", cim.relu(PlanePack.pack(a, 8)).unpack(),
+          " (1 access: gt predicate + peripheral select)")
+    A = jnp.array([[1, 2], [3, 4]], jnp.int32)
+    B = jnp.array([[5, -6], [7, 8]], jnp.int32)
+    print("A @ B  :", cim.matmul(A, B, n_bits=8).tolist(),
+          f" ({cim.plan_matmul(2, 2, n_bits=8).accesses} accesses,"
+          " independent of M and N)")
     print("\npaper-model EDP decrease per sensing scheme:")
     for scheme, row in edp_summary().items():
         print(f"  {scheme:8s}: speedup {row['speedup']:.2f}x, "

@@ -13,13 +13,17 @@ any registered backend:
                 analog-oracle, one dispatch point for all call sites
   engine      — execute / execute_unfused + integer-level add, sub,
                 compare, boolean wrappers + HBM traffic model/measurement
+  planner     — macro-op planner: multi-access computations lowered to
+                explicit access Schedules (the cost model IS the plan)
+  macro       — schedule executors: multiply, abs/relu/min/max, popcount,
+                tree reduce_sum, int8 dot/matmul — all in the packed domain
   accounting  — per-op energy ledger wired through repro.core.energy
 
 Layering: repro.core holds the physics (device model, sensing, gate-level
 modules, calibrated energy model) and remains the semantic oracle; repro.cim
 is the execution engine every caller dispatches through.
 """
-from . import accounting, backends, engine, opset  # noqa: F401
+from . import accounting, backends, engine, macro, opset, planner  # noqa: F401
 from .accounting import LEDGER, Ledger, ledger, project_savings  # noqa: F401
 from .backends import (  # noqa: F401
     available_backends,
@@ -41,5 +45,38 @@ from .engine import (  # noqa: F401
     traffic_model_bytes,
 )
 from .fused_kernel import DEFAULT_BLOCK_W, fused_planes_op  # noqa: F401
-from .opset import ALL_OPS, ARITH_OPS, BOOLEAN_OPS, PREDICATE_OPS  # noqa: F401
+from .macro import (  # noqa: F401
+    ScheduleCursor,
+    abs_,
+    dot,
+    matmul,
+    maximum,
+    minimum,
+    multiply,
+    popcount,
+    reduce_sum,
+    relu,
+    select,
+)
+from .opset import (  # noqa: F401
+    ALL_OPS,
+    ARITH_OPS,
+    BOOLEAN_OPS,
+    PREDICATE_OPS,
+    CimOpError,
+)
 from .planepack import PlanePack, mask_to_ints  # noqa: F401
+from .planner import (  # noqa: F401
+    Schedule,
+    Step,
+    plan_abs,
+    plan_dot,
+    plan_matmul,
+    plan_maximum,
+    plan_minimum,
+    plan_multiply,
+    plan_popcount,
+    plan_reduce_sum,
+    plan_relu,
+    schedule_traffic_bytes,
+)

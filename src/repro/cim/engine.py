@@ -41,7 +41,7 @@ def execute(a: PlanePack, b: PlanePack, ops: Sequence[str],
     """
     ops = opset.validate_ops(tuple(ops))
     if a.shape != b.shape:
-        raise ValueError(f"operand shapes differ: {a.shape} vs {b.shape}")
+        raise opset.CimOpError(f"operand shapes differ: {a.shape} vs {b.shape}")
     a, b = a.align(b)
     if (opset.needs_add_chain(ops) or opset.needs_sub_chain(ops)) \
             and not (a.signed and b.signed):
@@ -82,7 +82,10 @@ class CmpOut(NamedTuple):
 
 def add(x: jax.Array, y: jax.Array, n_bits: int = 32,
         backend: Optional[str] = None) -> jax.Array:
-    """x + y via one ADRA access; exact (n+1)-bit result, never overflows."""
+    """x + y via one ADRA access. The engine emits the full (n+1)-plane
+    result; unpack() materializes it as int32, so values are exact for
+    n_bits < 32 and wrap modulo 2^32 at n_bits = 32 (int32 semantics).
+    Callers needing the wider planes should use execute() directly."""
     out = execute(PlanePack.pack(x, n_bits), PlanePack.pack(y, n_bits),
                   ("add",), backend=backend)
     return out["add"].unpack()
@@ -109,7 +112,8 @@ def boolean(x: jax.Array, y: jax.Array, fn: str, n_bits: int = 32,
             backend: Optional[str] = None) -> jax.Array:
     """Any of the 16 two-input Boolean functions, one access."""
     if fn not in opset.BOOLEAN_OPS:
-        raise ValueError(f"unknown Boolean function {fn!r}")
+        raise opset.CimOpError(
+            f"unknown Boolean function {fn!r}; valid: {opset.BOOLEAN_OPS}")
     out = execute(PlanePack.pack(x, n_bits), PlanePack.pack(y, n_bits),
                   (fn,), backend=backend)
     return out[fn].unpack()

@@ -1,0 +1,329 @@
+"""Macro-op executors: multi-access CiM arithmetic over the single-access
+engine.
+
+Every macro here executes a `planner.Schedule` through a cursor that allows
+exactly the planned accesses (same order, same op-sets) and nothing else —
+each cursor step is one `engine.execute` call, so the accounting ledger is
+charged precisely `schedule.accesses` times per macro invocation. Operands,
+partial products, accumulators and tree levels all stay in the PlanePack
+packed domain; the only integer codec entries are the caller's own pack()
+at entry and unpack() at exit.
+
+Macros:
+
+  multiply   — shift-and-add; signed multipliers subtract the MSB partial
+               product (single-access sub, the paper's headline op)
+  abs_/relu  — sub-chain predicate + zero-cost peripheral select
+  minimum/maximum — lt/gt predicate + select, one access each
+  popcount   — pairwise plane tree, n-1 add accesses
+  reduce_sum — log-stride tree reduction with row-buffer shifts
+  dot/matmul — int x int -> wide-int contraction: one multiply over a
+               broadcast [M, K_pad, N] layout + a stride-N reduction; the
+               access count depends only on the bit width and K (word
+               parallelism), never on M or N
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import engine, opset, planner
+from .opset import CimOpError
+from .planepack import PlanePack
+
+
+class ScheduleCursor:
+    """Executes a Schedule one access at a time, refusing to deviate.
+
+    This is the accounting guarantee: a macro CANNOT issue an access its
+    plan does not contain, so ledger accesses == schedule.accesses holds by
+    construction, not by convention.
+    """
+
+    def __init__(self, schedule: planner.Schedule,
+                 backend: Optional[str] = None):
+        self.schedule = schedule
+        self.backend = backend
+        self._i = 0
+
+    def step(self) -> planner.Step:
+        if self._i >= len(self.schedule.steps):
+            raise CimOpError(
+                f"{self.schedule.macro}: executor exceeded its planned "
+                f"{self.schedule.accesses} accesses")
+        return self.schedule.steps[self._i]
+
+    def execute(self, a: PlanePack, b: PlanePack,
+                ops: Sequence[str]) -> engine.Outputs:
+        step = self.step()
+        if tuple(ops) != step.ops:
+            raise CimOpError(
+                f"{self.schedule.macro}: access {self._i} executes {ops!r} "
+                f"but the plan says {step.ops!r}")
+        self._i += 1
+        return engine.execute(a, b, step.ops, backend=self.backend)
+
+    def remaining(self) -> Tuple[planner.Step, ...]:
+        return self.schedule.steps[self._i:]
+
+    def finish(self) -> None:
+        if self._i != len(self.schedule.steps):
+            raise CimOpError(
+                f"{self.schedule.macro}: executed {self._i} of "
+                f"{self.schedule.accesses} planned accesses")
+
+
+# ---------------------------------------------------------------------------
+# peripheral select (zero accesses)
+# ---------------------------------------------------------------------------
+
+
+def select(pred: PlanePack, x: PlanePack, y: PlanePack) -> PlanePack:
+    """Per-word mux: pred ? x : y, as predicated writeback in the periphery.
+
+    The predicate is a 1-plane bitmap (an engine lt/eq/gt output); selection
+    gates which operand's planes reach the row buffer — no array access.
+    """
+    if pred.planes.shape[0] != 1:
+        raise CimOpError("select predicate must be a 1-plane bitmap")
+    if x.signed != y.signed:
+        n = max(x.n_bits, y.n_bits) + 1   # room so both read as signed
+        x, y = x.extend_to(n).as_signed(True), y.extend_to(n).as_signed(True)
+    x, y = x.align(y)
+    mask = pred.planes[0]
+    planes = (x.planes & mask) | (y.planes & ~mask)
+    return PlanePack(planes=planes, n_bits=x.n_bits,
+                     signed=x.signed, shape=x.shape)
+
+
+def _plane_mask(bitmap: jax.Array, n_bits: int, like: PlanePack) -> PlanePack:
+    """One multiplier-bit bitmap replicated across n_bits planes (the row
+    driver asserting the same enable on every plane — free wiring)."""
+    planes = jnp.broadcast_to(bitmap[None], (n_bits,) + bitmap.shape)
+    return PlanePack(planes=planes, n_bits=n_bits, signed=True,
+                     shape=like.shape)
+
+
+# ---------------------------------------------------------------------------
+# multiply
+# ---------------------------------------------------------------------------
+
+
+def _multiply_with(cur: ScheduleCursor, a: PlanePack,
+                   b: PlanePack) -> PlanePack:
+    """Shift-and-add over a cursor (shared by multiply and matmul)."""
+    w = a.n_bits + b.n_bits
+    a_ext = a.extend_to(w).as_signed(True)
+    acc: Optional[PlanePack] = None
+    for i in range(b.n_bits):
+        last_signed = b.signed and i == b.n_bits - 1
+        pp = cur.execute(a_ext, _plane_mask(b.planes[i], w, a), ("and",))
+        # AND of a sign-extended word against a replicated enable bit is a
+        # valid two's-complement word (a_ext or 0); shift = weight 2^i,
+        # truncation keeps the arithmetic modulo 2^w
+        shifted = pp["and"].as_signed(True).truncate_to(w - i).shift_up(i)
+        if acc is None:
+            if last_signed:            # 1-bit signed multiplier: b in {0,-1}
+                zero = PlanePack.zeros_like(shifted)
+                acc = cur.execute(zero, shifted, ("sub",))["sub"]
+            else:
+                acc = shifted
+        else:
+            op = "sub" if last_signed else "add"
+            acc = cur.execute(acc, shifted, (op,))[op]
+        acc = acc.truncate_to(w)
+    return acc.as_signed(a.signed or b.signed)
+
+
+def multiply(a: PlanePack, b: PlanePack,
+             backend: Optional[str] = None) -> PlanePack:
+    """Exact product, (n_a + n_b)-plane result, 2*n_b - 1 accesses."""
+    if a.shape != b.shape:
+        raise CimOpError(f"operand shapes differ: {a.shape} vs {b.shape}")
+    sched = planner.plan_multiply(a.n_bits, b.n_bits, signed_b=b.signed)
+    cur = ScheduleCursor(sched, backend)
+    out = _multiply_with(cur, a, b)
+    cur.finish()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# select-based macros: abs / relu / min / max
+# ---------------------------------------------------------------------------
+
+
+def abs_(a: PlanePack, backend: Optional[str] = None) -> PlanePack:
+    """|a| in one access: (0 - a, 0 < a) together, then select a vs -a.
+    Result is (n+1)-plane so abs(INT_MIN) is exact."""
+    cur = ScheduleCursor(planner.plan_abs(a.n_bits), backend)
+    zero = PlanePack.zeros_like(a)
+    out = cur.execute(zero, a, ("sub", "lt"))
+    cur.finish()
+    return select(out["lt"], a, out["sub"])
+
+
+def relu(a: PlanePack, backend: Optional[str] = None) -> PlanePack:
+    """max(a, 0) in one access: the a > 0 predicate gates the writeback."""
+    cur = ScheduleCursor(planner.plan_relu(a.n_bits), backend)
+    zero = PlanePack.zeros_like(a)
+    out = cur.execute(a, zero, ("gt",))
+    cur.finish()
+    return select(out["gt"], a, zero)
+
+
+def minimum(a: PlanePack, b: PlanePack,
+            backend: Optional[str] = None) -> PlanePack:
+    cur = ScheduleCursor(planner.plan_minimum(max(a.n_bits, b.n_bits)), backend)
+    out = cur.execute(a, b, ("lt",))
+    cur.finish()
+    return select(out["lt"], a, b)
+
+
+def maximum(a: PlanePack, b: PlanePack,
+            backend: Optional[str] = None) -> PlanePack:
+    cur = ScheduleCursor(planner.plan_maximum(max(a.n_bits, b.n_bits)), backend)
+    out = cur.execute(a, b, ("gt",))
+    cur.finish()
+    return select(out["gt"], a, b)
+
+
+# ---------------------------------------------------------------------------
+# popcount / reductions
+# ---------------------------------------------------------------------------
+
+
+def popcount(a: PlanePack, backend: Optional[str] = None) -> PlanePack:
+    """Set bits of each word's n-bit two's-complement pattern: pairwise
+    plane tree, n - 1 add accesses."""
+    cur = ScheduleCursor(planner.plan_popcount(a.n_bits), backend)
+    level = [PlanePack(planes=a.planes[i:i + 1], n_bits=1, signed=False,
+                       shape=a.shape)
+             for i in range(a.n_bits)]
+    while len(level) > 1:
+        nxt = [cur.execute(level[j], level[j + 1], ("add",))["add"]
+               for j in range(0, len(level) - 1, 2)]
+        if len(level) % 2:
+            nxt.append(level[-1])
+        level = nxt
+    cur.finish()
+    return level[0]
+
+
+def _reduce_with(cur: ScheduleCursor, acc: PlanePack) -> PlanePack:
+    """Log-stride reduction: each planned step shifts the row buffer by its
+    stride and adds, so element 0 of each segment accumulates the segment
+    sum; exactness relies on the pack's zero padding past the last word."""
+    if not acc.signed:
+        acc = acc.extend_to(acc.n_bits + 1).as_signed(True)
+    for step in cur.remaining():
+        shifted = acc.shift_elements(step.stride)
+        acc = cur.execute(acc, shifted, ("add",))["add"]
+    return acc
+
+
+def reduce_sum(a: PlanePack, backend: Optional[str] = None) -> PlanePack:
+    """Sum of ALL logical elements, ceil(log2(n_words)) accesses; returns a
+    scalar-shaped pack (element 0 of the tree)."""
+    cur = ScheduleCursor(planner.plan_reduce_sum(a.n_words, stride=1,
+                                                 n_bits=a.n_bits), backend)
+    acc = _reduce_with(cur, a)
+    cur.finish()
+    return PlanePack(planes=acc.planes, n_bits=acc.n_bits,
+                     signed=acc.signed, shape=())
+
+
+# ---------------------------------------------------------------------------
+# quantized dot / matmul
+# ---------------------------------------------------------------------------
+
+
+def matmul(a: jax.Array, b: jax.Array, n_bits: int = 8,
+           backend: Optional[str] = None) -> jax.Array:
+    """Exact intN x intN -> int32 matmul through the CiM array.
+
+    a : int [M, K], b : int [K, N], entries representable in n_bits signed.
+    Lowered to ONE shift-and-add multiply over the broadcast [M, K_pad, N]
+    operand layout plus a log2(K_pad) stride-N tree reduction — the whole
+    contraction is (2*n_bits - 1) + ceil(log2 K) accesses regardless of M
+    and N. Word-level parallelism is the CiM scaling argument; the operand
+    broadcast is the (honest) cost of it.
+    """
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise CimOpError(f"matmul needs [M,K] x [K,N], got {a.shape} {b.shape}")
+    m, k = a.shape
+    n = b.shape[1]
+    k_pad = 1 << planner._log2_ceil(k)
+    a_exp = jnp.zeros((m, k_pad, n), jnp.int32).at[:, :k, :].set(
+        jnp.broadcast_to(a[:, :, None], (m, k, n)).astype(jnp.int32))
+    b_exp = jnp.zeros((m, k_pad, n), jnp.int32).at[:, :k, :].set(
+        jnp.broadcast_to(b[None, :, :], (m, k, n)).astype(jnp.int32))
+
+    sched = planner.plan_matmul(k, n, n_bits=n_bits, signed=True)
+    cur = ScheduleCursor(sched, backend)
+    prod = _multiply_with(cur, PlanePack.pack(a_exp, n_bits),
+                          PlanePack.pack(b_exp, n_bits))
+    acc = _reduce_with(cur, prod)
+    cur.finish()
+
+    # k = 0 slice of each row: flat(m, 0, n) = m * K_pad * N + n
+    idx = (np.arange(m)[:, None] * (k_pad * n) + np.arange(n)[None, :])
+    return acc.take_words(idx.reshape(-1), (m, n)).unpack()
+
+
+def dot(a: jax.Array, b: jax.Array, n_bits: int = 8,
+        backend: Optional[str] = None) -> jax.Array:
+    """Exact intN x intN -> int32 dot product of two [K] vectors."""
+    a = jnp.asarray(a).reshape(1, -1)
+    b = jnp.asarray(b).reshape(-1, 1)
+    return matmul(a, b, n_bits=n_bits, backend=backend)[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# integer-level convenience wrappers (pack at entry, unpack at exit)
+# ---------------------------------------------------------------------------
+
+
+def multiply_ints(x: jax.Array, y: jax.Array, n_bits: int = 16,
+                  signed: bool = True,
+                  backend: Optional[str] = None) -> jax.Array:
+    p = multiply(PlanePack.pack(x, n_bits, signed=signed),
+                 PlanePack.pack(y, n_bits, signed=signed), backend=backend)
+    return p.unpack()
+
+
+def relu_ints(x: jax.Array, n_bits: int = 16,
+              backend: Optional[str] = None) -> jax.Array:
+    return relu(PlanePack.pack(x, n_bits), backend=backend).unpack()
+
+
+def abs_ints(x: jax.Array, n_bits: int = 16,
+             backend: Optional[str] = None) -> jax.Array:
+    return abs_(PlanePack.pack(x, n_bits), backend=backend).unpack()
+
+
+def minimum_ints(x: jax.Array, y: jax.Array, n_bits: int = 16,
+                 backend: Optional[str] = None) -> jax.Array:
+    return minimum(PlanePack.pack(x, n_bits), PlanePack.pack(y, n_bits),
+                   backend=backend).unpack()
+
+
+def maximum_ints(x: jax.Array, y: jax.Array, n_bits: int = 16,
+                 backend: Optional[str] = None) -> jax.Array:
+    return maximum(PlanePack.pack(x, n_bits), PlanePack.pack(y, n_bits),
+                   backend=backend).unpack()
+
+
+def popcount_ints(x: jax.Array, n_bits: int = 16,
+                  backend: Optional[str] = None) -> jax.Array:
+    return popcount(PlanePack.pack(x, n_bits), backend=backend).unpack()
+
+
+def reduce_sum_ints(x: jax.Array, n_bits: int = 16, signed: bool = True,
+                    backend: Optional[str] = None) -> jax.Array:
+    return reduce_sum(PlanePack.pack(x, n_bits, signed=signed),
+                      backend=backend).unpack()

@@ -14,6 +14,13 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+
+class CimOpError(ValueError):
+    """A malformed CiM op request (unknown op, empty/duplicate op-set, bad
+    Boolean function name). Subclasses ValueError so pre-existing callers
+    catching ValueError keep working; new callers can catch CiM failures
+    specifically."""
+
 #: the 16 two-input Boolean functions, minterm order (see repro.core.adra)
 BOOLEAN_OPS: Tuple[str, ...] = (
     "false", "nor", "a_and_not_b", "not_b", "not_a_and_b", "not_a",
@@ -37,12 +44,12 @@ _ADD_DERIVED = ("add", "carry_add")
 def validate_ops(ops: Tuple[str, ...]) -> Tuple[str, ...]:
     ops = tuple(ops)
     if not ops:
-        raise ValueError("empty op request")
+        raise CimOpError("empty op request")
     for op in ops:
         if op not in ALL_OPS:
-            raise ValueError(f"unknown CiM op {op!r}; valid: {ALL_OPS}")
+            raise CimOpError(f"unknown CiM op {op!r}; valid: {ALL_OPS}")
     if len(set(ops)) != len(ops):
-        raise ValueError(f"duplicate ops in request: {ops}")
+        raise CimOpError(f"duplicate ops in request: {ops}")
     return ops
 
 

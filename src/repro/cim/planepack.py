@@ -93,6 +93,87 @@ class PlanePack:
         n = max(self.n_bits, other.n_bits)
         return self.extend_to(n), other.extend_to(n)
 
+    # -- peripheral wiring for the macro-op planner -------------------------
+    # These model zero-access peripheral operations of the CiM array: plane
+    # re-weighting (shift), writeback truncation, signedness reinterpretation,
+    # and row-buffer data movement. None of them touch the integer codecs and
+    # none of them charge the ledger — only engine accesses do.
+
+    def as_signed(self, signed: bool = True) -> "PlanePack":
+        """Reinterpret the same planes under a different signedness. Caller
+        asserts the value is representable (e.g. an AND partial product of a
+        sign-extended operand IS a valid two's-complement word)."""
+        if signed == self.signed:
+            return self
+        return dataclasses.replace(self, signed=signed)
+
+    def shift_up(self, k: int) -> "PlanePack":
+        """Multiply by 2^k: insert k zero planes below the LSB (pure plane
+        re-indexing — the shift-and-add multiplier's shifted operand)."""
+        if k < 0:
+            raise ValueError(f"negative plane shift {k}")
+        if k == 0:
+            return self
+        zeros = jnp.zeros((k,) + self.planes.shape[1:], jnp.uint32)
+        return dataclasses.replace(
+            self, planes=jnp.concatenate([zeros, self.planes], axis=0),
+            n_bits=self.n_bits + k)
+
+    def truncate_to(self, n_bits: int) -> "PlanePack":
+        """Keep the lowest n_bits planes: arithmetic modulo 2^n_bits (the
+        writeback simply not storing the high planes)."""
+        if n_bits > self.n_bits:
+            raise ValueError(f"cannot truncate {self.n_bits} -> {n_bits} planes")
+        if n_bits == self.n_bits:
+            return self
+        return dataclasses.replace(self, planes=self.planes[:n_bits],
+                                   n_bits=n_bits)
+
+    def shift_elements(self, k: int) -> "PlanePack":
+        """Element j <- element j + k (zero fill past the end), per plane —
+        the row-buffer shuffle a tree reduction steps with. Operates on the
+        packed bitstream directly: element e lives at bit e of the
+        32-words-per-lane stream, so this is a k-bit funnel shift."""
+        if k < 0:
+            raise ValueError(f"negative element shift {k}")
+        word, bit = divmod(k, 32)
+        p = self.planes
+        n, w = p.shape
+        if word >= w:
+            return dataclasses.replace(self, planes=jnp.zeros_like(p))
+        if word:
+            p = jnp.concatenate(
+                [p[:, word:], jnp.zeros((n, word), jnp.uint32)], axis=1)
+        if bit:
+            hi = jnp.concatenate(
+                [p[:, 1:], jnp.zeros((n, 1), jnp.uint32)], axis=1)
+            p = (p >> jnp.uint32(bit)) | (hi << jnp.uint32(32 - bit))
+        return dataclasses.replace(self, planes=p)
+
+    def take_words(self, flat_indices, shape: Tuple[int, ...]) -> "PlanePack":
+        """Gather logical elements by flat index into a new pack of `shape`.
+
+        Plane-level bit gather + lane repack (row-buffer permutation); never
+        reassembles integers, so chained pipelines stay codec-free.
+        """
+        idx = jnp.asarray(flat_indices, jnp.uint32).reshape(-1)
+        word = (idx // 32).astype(jnp.int32)
+        bit = idx % 32
+        bits = (self.planes[:, word] >> bit) & jnp.uint32(1)   # [n_bits, N]
+        n = idx.shape[0]
+        pad = (-n) % 32
+        if pad:
+            bits = jnp.pad(bits, ((0, 0), (0, pad)))
+        weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+        planes = jnp.sum(bits.reshape(self.n_bits, -1, 32) * weights, axis=-1)
+        return PlanePack(planes=planes, n_bits=self.n_bits,
+                         signed=self.signed, shape=tuple(shape))
+
+    @classmethod
+    def zeros_like(cls, other: "PlanePack") -> "PlanePack":
+        """An all-zero pack of the same geometry (free: the array's zero row)."""
+        return dataclasses.replace(other, planes=jnp.zeros_like(other.planes))
+
 
 def mask_to_ints(bitmap: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
     """uint32[1, W] per-word predicate bitmap -> int32 0/1 tensor of shape."""

@@ -1,0 +1,208 @@
+"""Macro-op planner: lower multi-access CiM arithmetic to access schedules.
+
+The single-access engine (repro.cim.engine) computes any op-set the paper's
+one asymmetric dual-row activation can emit. Everything beyond that —
+multiplication, reductions, quantized dot products — is a *composition* of
+accesses. This module plans those compositions as explicit `Schedule`s: an
+ordered tuple of `Step`s, each describing exactly one `engine.execute` call
+(its op-set plus the zero-cost peripheral wiring around it: plane shifts for
+shift-and-add, element strides for tree reductions).
+
+The schedule IS the cost model. `Schedule.accesses == len(steps)` is the
+number of ADRA array accesses the macro performs, and `repro.cim.macro`
+executes schedules through a cursor that refuses to deviate from them — so
+the ledger's access count provably equals the planned count, keeping EDP
+projections faithful to the paper's access-count argument.
+
+Between accesses everything stays in the PlanePack packed domain; the only
+non-access operations a schedule implies are peripheral wiring (plane
+re-indexing, writeback truncation, row-buffer shifts) which move no operand
+through the array.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from . import opset
+
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    """One planned ADRA access.
+
+    ops    : the fused op-set of this access (one engine.execute call).
+    role   : dataflow role — 'pp' (partial product), 'acc' (accumulate),
+             'neg' (negate-from-zero), 'reduce' (tree-reduction add),
+             'pred' (predicate for a peripheral select), 'pair' (popcount
+             pairwise add).
+    shift  : plane (weight) shift applied to this step's operand, in planes.
+    stride : element stride of the row-buffer shift feeding this step.
+    """
+
+    ops: Tuple[str, ...]
+    role: str
+    shift: int = 0
+    stride: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """An ordered access plan for one macro op."""
+
+    macro: str
+    steps: Tuple[Step, ...]
+    out_bits: int                 # width of the macro's result planes
+
+    @property
+    def accesses(self) -> int:
+        return len(self.steps)
+
+    def op_passes(self) -> Tuple[Tuple[str, ...], ...]:
+        return tuple(s.ops for s in self.steps)
+
+    def __add__(self, other: "Schedule") -> "Schedule":
+        return Schedule(macro=f"{self.macro}+{other.macro}",
+                        steps=self.steps + other.steps,
+                        out_bits=max(self.out_bits, other.out_bits))
+
+
+def _log2_ceil(n: int) -> int:
+    r = 0
+    while (1 << r) < n:
+        r += 1
+    return r
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+
+
+def plan_multiply(n_bits_a: int, n_bits_b: int,
+                  signed_b: bool = True) -> Schedule:
+    """Shift-and-add multiply: one AND access per multiplier bit (partial
+    product against the sign-extended multiplicand), one add access per
+    accumulation; the top bit of a signed multiplier carries weight
+    -2^(n-1), so its partial product is *subtracted* — the engine's
+    single-access sub makes that free of extra passes."""
+    if n_bits_a < 1 or n_bits_b < 1:
+        raise opset.CimOpError(
+            f"multiply needs positive widths, got {n_bits_a}x{n_bits_b}")
+    steps = []
+    for i in range(n_bits_b):
+        last_signed = signed_b and i == n_bits_b - 1
+        steps.append(Step(("and",), role="pp", shift=i))
+        if i == 0:
+            if last_signed:            # 1-bit signed multiplier: b in {0,-1}
+                steps.append(Step(("sub",), role="neg", shift=i))
+        else:
+            steps.append(Step(("sub" if last_signed else "add",),
+                              role="acc", shift=i))
+    return Schedule("multiply", tuple(steps), out_bits=n_bits_a + n_bits_b)
+
+
+def plan_abs(n_bits: int) -> Schedule:
+    """abs via the sub-chain: ONE access computes 0 - a and the 0 < a
+    predicate together; a peripheral select between a and -a finishes it."""
+    return Schedule("abs", (Step(("sub", "lt"), role="pred"),),
+                    out_bits=n_bits + 1)
+
+
+def plan_relu(n_bits: int) -> Schedule:
+    """relu: one access for the a > 0 predicate; peripheral select a vs 0."""
+    return Schedule("relu", (Step(("gt",), role="pred"),), out_bits=n_bits)
+
+
+def plan_minimum(n_bits: int) -> Schedule:
+    return Schedule("minimum", (Step(("lt",), role="pred"),), out_bits=n_bits)
+
+
+def plan_maximum(n_bits: int) -> Schedule:
+    return Schedule("maximum", (Step(("gt",), role="pred"),), out_bits=n_bits)
+
+
+def plan_popcount(n_bits: int) -> Schedule:
+    """Pairwise tree over the n single-bit planes: n - 1 add accesses."""
+    if n_bits < 1:
+        raise opset.CimOpError(f"popcount needs positive width, got {n_bits}")
+    steps, level = [], n_bits
+    while level > 1:
+        pairs = level // 2
+        steps.extend(Step(("add",), role="pair") for _ in range(pairs))
+        level = pairs + (level % 2)
+    return Schedule("popcount", tuple(steps),
+                    out_bits=_log2_ceil(n_bits + 1) + 1)
+
+
+def plan_reduce_sum(n_elems: int, stride: int = 1,
+                    n_bits: int = 32) -> Schedule:
+    """Log-stride tree reduction: ceil(log2(n)) add accesses, each fed by a
+    zero-fill row-buffer shift of stride * 2^r elements. Element 0 (of each
+    stride-aligned segment) holds the sum afterwards."""
+    if n_elems < 1:
+        raise opset.CimOpError(f"reduce needs at least one element, {n_elems}")
+    steps = tuple(Step(("add",), role="reduce", stride=stride << r)
+                  for r in range(_log2_ceil(n_elems)))
+    return Schedule("reduce_sum", steps,
+                    out_bits=n_bits + _log2_ceil(n_elems))
+
+
+def plan_matmul(k: int, n_cols: int, n_bits: int = 8,
+                signed: bool = True) -> Schedule:
+    """int x int -> wide-int matmul over a [M, K_pad, N] broadcast layout:
+    ONE shift-and-add multiply over the whole expanded tensor (word
+    parallelism makes the access count independent of M and N) followed by a
+    log2(K_pad) stride-N tree reduction over the contraction axis."""
+    if k < 1 or n_cols < 1:
+        raise opset.CimOpError(f"matmul needs k, n >= 1, got {k}, {n_cols}")
+    k_pad = 1 << _log2_ceil(k)
+    mul = plan_multiply(n_bits, n_bits, signed_b=signed)
+    red = plan_reduce_sum(k_pad, stride=n_cols, n_bits=mul.out_bits)
+    return Schedule("matmul", mul.steps + red.steps, out_bits=red.out_bits)
+
+
+def plan_dot(k: int, n_bits: int = 8, signed: bool = True) -> Schedule:
+    sched = plan_matmul(k, 1, n_bits=n_bits, signed=signed)
+    return dataclasses.replace(sched, macro="dot")
+
+
+PLANS = {
+    "multiply": plan_multiply,
+    "abs": plan_abs,
+    "relu": plan_relu,
+    "minimum": plan_minimum,
+    "maximum": plan_maximum,
+    "popcount": plan_popcount,
+    "reduce_sum": plan_reduce_sum,
+    "matmul": plan_matmul,
+    "dot": plan_dot,
+}
+
+
+# ---------------------------------------------------------------------------
+# traffic: fused (in-array intermediates) vs unfused (near-memory) schedules
+# ---------------------------------------------------------------------------
+
+
+def schedule_traffic_bytes(schedule: Schedule, n_bits: int, n_words32: int,
+                           working_bits: Optional[int] = None
+                           ) -> Dict[str, float]:
+    """HBM-byte model of executing a schedule fused vs unfused.
+
+    Fused: the macro streams both operand stacks ONCE and writes the final
+    result once; every intermediate (partial products, accumulator, tree
+    levels) stays in the array between accesses. Unfused (near-memory
+    baseline): each scheduled step re-reads its two operand stacks at the
+    working width and writes its outputs back — the k-access analogue of the
+    paper's two-access baseline, generalized to macro schedules.
+    """
+    w = working_bits if working_bits is not None else schedule.out_bits
+    plane_bytes = 4 * n_words32
+    fused = (2 * n_bits + schedule.out_bits) * plane_bytes
+    baseline = 0.0
+    for step in schedule.steps:
+        out_rows = sum(opset.out_rows(op, w) for op in step.ops)
+        baseline += (2 * w + out_rows) * plane_bytes
+    return {"fused": float(fused), "baseline": float(baseline),
+            "ratio": baseline / fused}

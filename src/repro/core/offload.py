@@ -1,11 +1,19 @@
 """ADRA offload estimator: project CiM savings for a compiled XLA program.
 
-Scans HLO text for ADRA-eligible ops — elementwise integer add / subtract /
-compare — sums their operand bytes, and projects the energy-delay saving were
-those bytes served by ADRA CiM arrays instead of two-pass read+compute, using
-the calibrated model in repro.core.energy. This ties the paper's array-level
-numbers to LM-scale workloads (and quantifies, honestly, how big that slice
-of a transformer step actually is).
+Scans HLO text for ADRA-eligible ops and projects the energy-delay saving
+were those ops served by ADRA CiM arrays instead of read+compute passes,
+using the calibrated model in repro.core.energy. Two tiers:
+
+  single-access — elementwise integer add / subtract / compare / bitwise /
+    min / max: one ADRA access each (the paper's primitive set).
+  multi-access  — integer `multiply` and `dot`: lowered by the macro-op
+    planner (repro.cim.planner) to shift-and-add / tree-reduction access
+    schedules; the estimator charges the PLANNED access count per op, so
+    the projection stays faithful to the access-count cost model rather
+    than pretending multiplication is free.
+
+This ties the paper's array-level numbers to LM-scale workloads (and
+quantifies, honestly, how big that slice of a transformer step actually is).
 """
 from __future__ import annotations
 
@@ -15,8 +23,10 @@ from typing import Dict
 
 from . import energy
 
-# HLO ops whose semantics ADRA computes in-array for integer operands
+# HLO ops whose semantics ADRA computes in-array in ONE access
 _ELIGIBLE = ("add", "subtract", "compare", "and", "or", "xor", "maximum", "minimum")
+# the multi-access tier ("multiply", "dot") is matched by _MUL_RE / _DOT_RE
+# below, each lowered through the planner's access schedules
 _INT_TYPES = ("s8", "u8", "s16", "u16", "s32", "u32", "s4", "u4")
 
 _SHAPE_RE = re.compile(r"(" + "|".join(_INT_TYPES) + r")\[([0-9,]*)\]")
@@ -25,9 +35,23 @@ _OP_RE = re.compile(
     + "|".join(_ELIGIBLE) + r")\(",
     re.M,
 )
+_MUL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(" + "|".join(_INT_TYPES) + r")\[([0-9,]*)\][^=]*?\smultiply\(",
+    re.M,
+)
+# dot: result may be wider than the operands (s8 x s8 -> s32); capture the
+# lhs operand's dtype/shape and the contracting dims clause when present
+_DOT_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:" + "|".join(_INT_TYPES)
+    + r")\[([0-9,]*)\][^=]*?\sdot\(\s*(" + "|".join(_INT_TYPES)
+    + r")\[([0-9,]*)\][^)]*\)(?:[^\n]*lhs_contracting_dims=\{(\d+)\})?",
+    re.M,
+)
 
 _BYTES = {"s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
           "s32": 4, "u32": 4, "pred": 1}
+_BITS = {"s4": 4, "u4": 4, "s8": 8, "u8": 8, "s16": 16, "u16": 16,
+         "s32": 32, "u32": 32}
 
 
 def _numel(dims: str) -> int:
@@ -48,6 +72,8 @@ class OffloadReport:
     edp_decrease_pct: float          # paper model, current sensing @1024^2
     energy_saved_fj: float
     op_histogram: Dict[str, int]
+    multi_access_ops: int = 0        # multiply/dot ops lowered by the planner
+    planner_accesses: int = 0        # total planned accesses for those ops
 
     @property
     def eligible_fraction(self) -> float:
@@ -55,18 +81,61 @@ class OffloadReport:
 
 
 def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024) -> OffloadReport:
-    """Scan HLO for ADRA-eligible integer elementwise ops and project savings."""
+    """Scan HLO for ADRA-eligible integer ops and project savings."""
+    # lazy imports break the core<->cim module cycle
+    from repro.cim.accounting import project_savings
+    from repro.cim.planner import plan_matmul, plan_multiply
+
     hist: Dict[str, int] = {}
     eligible_bytes = 0
+    words32 = 0.0
     n_ops = 0
+    n_multi = 0
+    planner_accesses = 0
+
     for m in _OP_RE.finditer(hlo_text):
         dtype, dims, op = m.group(1), m.group(2), m.group(3)
         nel = _numel(dims)
         # two operand reads + one result write at the op's element width
         width = _BYTES.get(dtype, 4)
         eligible_bytes += int(3 * nel * width)
+        words32 += nel * width / 4.0
         n_ops += 1
         hist[op] = hist.get(op, 0) + 1
+
+    for m in _MUL_RE.finditer(hlo_text):
+        dtype, dims = m.group(1), m.group(2)
+        nel = _numel(dims)
+        bits = _BITS.get(dtype, 32)
+        accesses = plan_multiply(bits, bits).accesses
+        # shift-and-add works at the 2n-bit product width on every access
+        words32 += accesses * nel * (2 * bits) / 32.0
+        eligible_bytes += int(3 * nel * _BYTES.get(dtype, 4))
+        n_ops += 1
+        n_multi += 1
+        planner_accesses += accesses
+        hist["multiply"] = hist.get("multiply", 0) + 1
+
+    for m in _DOT_RE.finditer(hlo_text):
+        out_dims, lhs_dtype, lhs_dims, cdim = m.groups()
+        lhs_shape = [int(d) for d in lhs_dims.split(",")] if lhs_dims else []
+        k = 1
+        if lhs_shape:
+            ci = int(cdim) if cdim is not None else len(lhs_shape) - 1
+            k = lhs_shape[ci] if ci < len(lhs_shape) else lhs_shape[-1]
+        bits = _BITS.get(lhs_dtype, 32)
+        out_nel = _numel(out_dims)
+        sched = plan_matmul(k, 1, n_bits=bits)
+        # the packed contraction layout holds out_nel * K_pad product words
+        k_pad = 1 << max(0, (k - 1).bit_length())
+        words32 += sched.accesses * out_nel * k_pad * (2 * bits) / 32.0
+        # operand reads at the input width + the (4-byte) wide result write
+        eligible_bytes += int(out_nel * k * 2 * _BYTES.get(lhs_dtype, 4)
+                              + out_nel * 4)
+        n_ops += 1
+        n_multi += 1
+        planner_accesses += sched.accesses
+        hist["dot"] = hist.get("dot", 0) + 1
 
     # crude total-traffic estimate: every shaped tensor literal in the module
     total = 0
@@ -74,19 +143,15 @@ def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024) -> Off
         total += int(_numel(m.group(2)) * _BYTES.get(m.group(1), 4))
     total = max(total, eligible_bytes)
 
-    # project through the CiM engine's accounting layer (same ledger math the
-    # engine charges per executed op-set); lazy import breaks the core<->cim
-    # module cycle
-    from repro.cim.accounting import project_savings
-
-    words32 = eligible_bytes // 4
     proj = project_savings(words32, scheme=scheme, rows=rows)
     return OffloadReport(
         eligible_ops=n_ops,
         eligible_bytes=eligible_bytes,
         total_bytes_estimate=total,
-        words32=words32,
+        words32=int(words32),
         edp_decrease_pct=proj["edp_decrease_pct"],
         energy_saved_fj=proj["energy_saved_fj"],
         op_histogram=hist,
+        multi_access_ops=n_multi,
+        planner_accesses=planner_accesses,
     )

@@ -15,7 +15,7 @@ from typing import Optional
 
 import jax
 
-from repro.cim import PlanePack, execute, execute_unfused, on_tpu
+from repro.cim import PlanePack, execute, execute_unfused, macro, on_tpu
 from repro.cim.planepack import mask_to_ints
 from . import ref
 from .adra_bitplane import adra_bitplane_op, baseline_bitplane_sub_then_cmp  # noqa: F401
@@ -72,6 +72,30 @@ def baseline_sub_then_cmp(a: jax.Array, b: jax.Array, n_bits: int = 16,
     out = execute_unfused(PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits),
                           (("sub",), ("lt", "eq")), backend=bk)
     return out["sub"].unpack(), out["lt"].unpack(), out["eq"].unpack()
+
+
+# ---------------------------------------------------------------------------
+# Macro ops (multi-access schedules from the CiM planner)
+# ---------------------------------------------------------------------------
+
+
+def cim_matmul(a: jax.Array, b: jax.Array, n_bits: int = 8,
+               interpret: bool | None = None, backend: str | None = None):
+    """Exact intN x intN -> int32 matmul through planned CiM access schedules.
+
+    a [M, K], b [K, N] with entries representable in n_bits signed. The
+    access count is (2*n_bits - 1) + ceil(log2 K) — independent of M and N.
+    """
+    return macro.matmul(a, b, n_bits=n_bits,
+                        backend=_resolve_backend(interpret, backend))
+
+
+def cim_relu(x: jax.Array, n_bits: int = 16,
+             interpret: bool | None = None, backend: str | None = None):
+    """max(x, 0) over integer arrays: ONE access (gt predicate + peripheral
+    select) regardless of width."""
+    bk = _resolve_backend(interpret, backend)
+    return macro.relu(PlanePack.pack(x, n_bits), backend=bk).unpack()
 
 
 # ---------------------------------------------------------------------------

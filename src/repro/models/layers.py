@@ -128,6 +128,56 @@ def mlp(p: Params, x: jax.Array, gating: str) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Opt-in CiM-quantized linear path
+# ---------------------------------------------------------------------------
+
+
+def quantize_symmetric(x: jax.Array, n_bits: int = 8):
+    """Per-tensor symmetric quantization: x ~ q * scale, q in intN range."""
+    qmax = float(2 ** (n_bits - 1) - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-8) / qmax
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int32), scale
+
+
+def cim_linear(x: jax.Array, w: jax.Array, n_bits: int = 8,
+               backend: str | None = None) -> jax.Array:
+    """Opt-in CiM execution of x @ w via int8 symmetric quantization.
+
+    x [..., D], w [D, F] -> f32 [..., F]. Both operands are fake-quantized
+    per-tensor, contracted EXACTLY in the CiM array (int8 x int8 -> int32
+    through the macro planner's access schedule), and rescaled. This is a
+    functional-simulation path for model-scale integer offload studies, not
+    a fast path: the packed broadcast layout materializes M*K*N words, so
+    use it on reduced configs / layer slices.
+    """
+    from repro.kernels.ops import cim_matmul
+
+    d, f = w.shape
+    lead = x.shape[:-1]
+    xq, sx = quantize_symmetric(x, n_bits)
+    wq, sw = quantize_symmetric(w, n_bits)
+    y = cim_matmul(xq.reshape(-1, d), wq, n_bits=n_bits, backend=backend)
+    return (y.astype(jnp.float32) * (sx * sw)).reshape(lead + (f,))
+
+
+def mlp_cim(p: Params, x: jax.Array, gating: str, n_bits: int = 8,
+            backend: str | None = None) -> jax.Array:
+    """The MLP with every matmul routed through the CiM-quantized path —
+    the opt-in twin of `mlp` for offload studies on reduced configs."""
+    h = cim_linear(x, p["w_in"], n_bits=n_bits, backend=backend)
+    if gating == "swiglu":
+        g = cim_linear(x, p["w_gate"], n_bits=n_bits, backend=backend)
+        h = jax.nn.silu(g) * h
+    elif gating == "geglu":
+        g = cim_linear(x, p["w_gate"], n_bits=n_bits, backend=backend)
+        h = jax.nn.gelu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return cim_linear(h, p["w_out"], n_bits=n_bits, backend=backend).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Embedding / LM head
 # ---------------------------------------------------------------------------
 

@@ -8,7 +8,7 @@ strategy from a per-example np.random.RandomState — weaker shrinking, same
 coverage shape, zero extra dependencies.
 """
 try:
-    from hypothesis import given, settings, strategies as st  # noqa: F401
+    from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: F401
 
     HAVE_HYPOTHESIS = True
 except ImportError:
@@ -38,6 +38,12 @@ except ImportError:
             return _Strategy(lambda rng: [
                 elements.draw(rng)
                 for _ in range(int(rng.randint(min_size, max_size + 1)))])
+
+    class HealthCheck:  # noqa: N801 — mirrors hypothesis.HealthCheck
+        function_scoped_fixture = "function_scoped_fixture"
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+        filter_too_much = "filter_too_much"
 
     def settings(*_args, **_kwargs):
         def deco(f):

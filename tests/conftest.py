@@ -1,0 +1,14 @@
+"""Shared fixtures for the tier-1 suite."""
+import pytest
+
+from repro.cim.accounting import LEDGER
+
+
+@pytest.fixture(autouse=True)
+def _reset_cim_ledger():
+    """The engine charges a process-wide ledger; reset it around every test
+    so access-count assertions can never leak across tests (and a test that
+    forgets to reset cannot poison a later one)."""
+    LEDGER.reset()
+    yield
+    LEDGER.reset()

@@ -1,0 +1,197 @@
+"""Property-based differential tests: the CiM engine and every macro op vs
+a numpy oracle, over random bit-widths 2-32, signed and unsigned operands,
+and forced INT_MIN / -1 / 0 / MAX edge cases, across the CPU backends.
+
+Runs under real hypothesis when installed and under the seeded-numpy
+fallback otherwise (tests/_hypothesis_compat.py).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro import cim
+from repro.cim import PlanePack, macro, planner
+from repro.cim.accounting import LEDGER
+
+from _hypothesis_compat import HealthCheck, given, settings, st
+
+PORTABLE = ("jnp-boolean", "pallas-interpret")
+
+_PROP = dict(max_examples=25, deadline=None,
+             suppress_health_check=[HealthCheck.function_scoped_fixture])
+
+
+def _wrap32(v):
+    """What unpack() returns for any plane width: int32 two's complement."""
+    return ((np.asarray(v, np.int64) + (1 << 31)) % (1 << 32)) - (1 << 31)
+
+
+def _operands(n_bits, signed, seed, n_words=12):
+    """int64 operand pair with INT_MIN / -1 / 0 / 1 / MAX edges forced in."""
+    rng = np.random.RandomState(seed)
+    if signed:
+        lo, hi = -(1 << (n_bits - 1)), 1 << (n_bits - 1)
+        edges = np.array([lo, -1, 0, 1, hi - 1], np.int64)
+    else:
+        lo, hi = 0, 1 << n_bits
+        edges = np.array([0, 1, hi - 1, hi >> 1], np.int64)
+    n_rand = max(0, n_words - len(edges))
+    a = np.concatenate([edges, rng.randint(lo, hi, n_rand, dtype=np.int64)])
+    b = np.concatenate([edges[::-1], rng.randint(lo, hi, n_rand, dtype=np.int64)])
+    return a, b
+
+
+def _pack64(v, n_bits, signed):
+    """Pack an int64 value array (bit patterns) as a PlanePack."""
+    pattern = (v & 0xFFFFFFFF).astype(np.uint32).view(np.int32)
+    return PlanePack.pack(jnp.array(pattern), n_bits, signed=signed)
+
+
+# ---------------------------------------------------------------------------
+# single-access op surface
+# ---------------------------------------------------------------------------
+
+
+def _check_single_access(backend, n_bits, signed, seed):
+    a, b = _operands(n_bits, signed, seed)
+    mask = (1 << n_bits) - 1
+    pa, pb = _pack64(a, n_bits, signed), _pack64(b, n_bits, signed)
+
+    arith_ops = ["add", "sub", "lt", "eq", "gt"]
+    if signed:                      # no width extension -> carries are n-bit
+        arith_ops += ["carry_add", "carry_sub"]
+    out = cim.execute(pa, pb, tuple(arith_ops), backend=backend)
+    got = {op: np.asarray(out[op].unpack(), np.int64) for op in arith_ops}
+    np.testing.assert_array_equal(got["add"], _wrap32(a + b), err_msg="add")
+    np.testing.assert_array_equal(got["sub"], _wrap32(a - b), err_msg="sub")
+    np.testing.assert_array_equal(got["lt"], (a < b).astype(np.int64))
+    np.testing.assert_array_equal(got["eq"], (a == b).astype(np.int64))
+    np.testing.assert_array_equal(got["gt"], (a > b).astype(np.int64))
+    if signed:
+        pat_a, pat_b = a & mask, b & mask
+        np.testing.assert_array_equal(
+            got["carry_add"], (pat_a + pat_b) >> n_bits, err_msg="carry_add")
+        np.testing.assert_array_equal(
+            got["carry_sub"], (pat_a + (~b & mask) + 1) >> n_bits,
+            err_msg="carry_sub")
+
+    # all 16 Boolean functions in one (extension-free) access
+    out = cim.execute(pa, pb, cim.BOOLEAN_OPS, backend=backend)
+    pat_a, pat_b = a & mask, b & mask
+    ref = {
+        "false": np.zeros_like(pat_a), "true": np.full_like(pat_a, mask),
+        "and": pat_a & pat_b, "or": pat_a | pat_b, "xor": pat_a ^ pat_b,
+        "nand": ~(pat_a & pat_b) & mask, "nor": ~(pat_a | pat_b) & mask,
+        "xnor": ~(pat_a ^ pat_b) & mask, "a": pat_a, "b": pat_b,
+        "not_a": ~pat_a & mask, "not_b": ~pat_b & mask,
+        "a_and_not_b": pat_a & ~pat_b & mask,
+        "not_a_and_b": ~pat_a & mask & pat_b,
+        "a_or_not_b": (pat_a | (~pat_b & mask)) & mask,
+        "not_a_or_b": ((~pat_a & mask) | pat_b) & mask,
+    }
+    for fn in cim.BOOLEAN_OPS:
+        np.testing.assert_array_equal(
+            np.asarray(out[fn].unpack(), np.int64), _wrap32(ref[fn]),
+            err_msg=fn)
+
+
+@settings(**_PROP)
+@given(st.integers(2, 32), st.booleans(), st.integers(0, 2**31 - 1))
+def test_property_single_access_portable(n_bits, signed, seed):
+    for backend in PORTABLE:
+        _check_single_access(backend, n_bits, signed, seed)
+
+
+@settings(**_PROP)
+@given(st.integers(2, 8), st.booleans(), st.integers(0, 2**31 - 1))
+def test_property_single_access_analog(n_bits, signed, seed):
+    _check_single_access("analog-oracle", n_bits, signed, seed)
+
+
+# ---------------------------------------------------------------------------
+# macro ops
+# ---------------------------------------------------------------------------
+
+
+@settings(**_PROP)
+@given(st.integers(2, 16), st.integers(2, 16), st.booleans(),
+       st.integers(0, 2**31 - 1))
+def test_property_multiply(wa, wb, signed, seed):
+    a, _ = _operands(wa, signed, seed, n_words=10)
+    _, b = _operands(wb, signed, seed + 1, n_words=10)
+    LEDGER.reset()
+    p = macro.multiply(_pack64(a, wa, signed), _pack64(b, wb, signed),
+                       backend="jnp-boolean")
+    assert LEDGER.accesses == planner.plan_multiply(wa, wb, signed).accesses
+    np.testing.assert_array_equal(np.asarray(p.unpack(), np.int64),
+                                  _wrap32(a * b))
+
+
+@settings(**_PROP)
+@given(st.integers(2, 32), st.integers(0, 2**31 - 1))
+def test_property_select_macros_and_popcount(n_bits, seed):
+    a, b = _operands(n_bits, True, seed)
+    mask = (1 << n_bits) - 1
+    pa, pb = _pack64(a, n_bits, True), _pack64(b, n_bits, True)
+    for backend in PORTABLE:
+        LEDGER.reset()
+        np.testing.assert_array_equal(
+            np.asarray(macro.abs_(pa, backend=backend).unpack(), np.int64),
+            _wrap32(np.abs(a)), err_msg="abs")
+        np.testing.assert_array_equal(
+            np.asarray(macro.relu(pa, backend=backend).unpack(), np.int64),
+            _wrap32(np.maximum(a, 0)), err_msg="relu")
+        np.testing.assert_array_equal(
+            np.asarray(macro.minimum(pa, pb, backend=backend).unpack(),
+                       np.int64), _wrap32(np.minimum(a, b)), err_msg="min")
+        np.testing.assert_array_equal(
+            np.asarray(macro.maximum(pa, pb, backend=backend).unpack(),
+                       np.int64), _wrap32(np.maximum(a, b)), err_msg="max")
+        assert LEDGER.accesses == 4              # one access per select macro
+    # popcount is n-1 accesses: property-check it on the fast backend only
+    pc = macro.popcount(pa, backend="jnp-boolean").unpack()
+    want = [bin(int(v) & mask).count("1") for v in a]
+    np.testing.assert_array_equal(np.asarray(pc, np.int64), want,
+                                  err_msg="popcount")
+
+
+@settings(**_PROP)
+@given(st.integers(2, 12), st.booleans(), st.integers(1, 64),
+       st.integers(0, 2**31 - 1))
+def test_property_reduce_sum(n_bits, signed, n, seed):
+    rng = np.random.RandomState(seed)
+    lo, hi = ((-(1 << (n_bits - 1)), 1 << (n_bits - 1)) if signed
+              else (0, 1 << n_bits))
+    x = rng.randint(lo, hi, n, dtype=np.int64)
+    x[:1] = lo                                   # force the extreme value in
+    LEDGER.reset()
+    out = macro.reduce_sum(_pack64(x, n_bits, signed), backend="jnp-boolean")
+    assert LEDGER.accesses == planner.plan_reduce_sum(n).accesses
+    assert int(out.unpack()) == int(x.sum())
+
+
+@settings(**_PROP)
+@given(st.integers(1, 9), st.integers(0, 2**31 - 1))
+def test_property_int8_dot(k, seed):
+    rng = np.random.RandomState(seed)
+    a = rng.randint(-128, 128, k).astype(np.int32)
+    b = rng.randint(-128, 128, k).astype(np.int32)
+    a[:1], b[:1] = -128, -128                    # INT8_MIN edge
+    LEDGER.reset()
+    got = cim.dot(jnp.array(a), jnp.array(b), n_bits=8, backend="jnp-boolean")
+    assert LEDGER.accesses == planner.plan_dot(k, n_bits=8).accesses
+    assert int(got) == int(a.astype(np.int64) @ b.astype(np.int64))
+
+
+@settings(**_PROP)
+@given(st.integers(2, 4), st.booleans(), st.integers(0, 2**31 - 1))
+def test_property_macro_analog_oracle(n_bits, signed, seed):
+    """The device-model backend agrees with the oracle on macro schedules."""
+    a, b = _operands(n_bits, signed, seed, n_words=6)
+    pa, pb = _pack64(a, n_bits, signed), _pack64(b, n_bits, signed)
+    p = macro.multiply(pa, pb, backend="analog-oracle")
+    np.testing.assert_array_equal(np.asarray(p.unpack(), np.int64),
+                                  _wrap32(a * b))
+    if signed:
+        np.testing.assert_array_equal(
+            np.asarray(macro.relu(pa, backend="analog-oracle").unpack(),
+                       np.int64), _wrap32(np.maximum(a, 0)))
