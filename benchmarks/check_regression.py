@@ -1,0 +1,106 @@
+"""CI perf-regression gate over BENCH_kernel.json.
+
+Compares a freshly produced benchmark JSON against the committed baseline
+(benchmarks/baselines/BENCH_kernel.baseline.json) and FAILS (exit 1) when:
+
+  * any traffic/efficiency ratio regresses more than --tolerance (default
+    10%) below its baseline value — keys named `ratio` or `*_ratio*`, plus
+    nested {"ratio": ...} traffic dicts;
+  * any access count GROWS — keys named `accesses`, `ledger_accesses`,
+    `banked_accesses` or `waves`: the planner/dispatcher access model is
+    exact, so any growth is a real cost regression, not noise;
+  * a gated baseline key disappeared from the current run (a silently
+    dropped benchmark section must not pass the gate).
+
+Wall-times and machine-dependent metrics are deliberately NOT gated; the
+gated quantities are analytic (byte models, schedule lengths, tile counts)
+and therefore deterministic across hosts.
+
+Usage:
+    python benchmarks/check_regression.py [BENCH_kernel.json]
+        [--baseline benchmarks/baselines/BENCH_kernel.baseline.json]
+        [--tolerance 0.10]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: key names gated as never-grow counters (exact, deterministic)
+COUNTER_KEYS = ("accesses", "ledger_accesses", "banked_accesses", "waves")
+
+
+def _is_ratio_key(key: str) -> bool:
+    return "ratio" in key
+
+
+def compare(baseline, current, tolerance: float, path: str = ""):
+    """Yield (path, kind, baseline, current) problem tuples."""
+    if isinstance(baseline, dict):
+        if not isinstance(current, dict):
+            yield (path, "missing", baseline, current)
+            return
+        for key, bval in baseline.items():
+            sub = f"{path}.{key}" if path else key
+            if key in current:
+                yield from compare(bval, current[key], tolerance, sub)
+            elif _gated(key, bval):
+                yield (sub, "missing", bval, None)
+        return
+    key = path.rsplit(".", 1)[-1]
+    if not isinstance(baseline, (int, float)) or isinstance(baseline, bool):
+        return
+    if not isinstance(current, (int, float)):
+        yield (path, "missing", baseline, current)
+        return
+    if _is_ratio_key(key) and current < baseline * (1.0 - tolerance):
+        yield (path, "ratio-regressed", baseline, current)
+    if key in COUNTER_KEYS and current > baseline:
+        yield (path, "count-grew", baseline, current)
+
+
+def _gated(key: str, value) -> bool:
+    """Does this baseline subtree contain anything the gate checks?"""
+    if isinstance(value, dict):
+        return any(_gated(k, v) for k, v in value.items())
+    return _is_ratio_key(key) or key in COUNTER_KEYS
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", nargs="?", default="BENCH_kernel.json",
+                    help="benchmark JSON produced by kernel_bench.py --json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_kernel.baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional ratio drop (default 0.10)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    problems = list(compare(baseline, current, args.tolerance))
+    checked = sum(_count_gated(k, v) for k, v in baseline.items())
+    if problems:
+        print(f"PERF REGRESSION: {len(problems)} of {checked} gated metrics "
+              f"failed vs {args.baseline}")
+        for path, kind, bval, cval in problems:
+            print(f"  {kind:16s} {path}: baseline={str(bval)[:80]} "
+                  f"current={str(cval)[:80]}")
+        return 1
+    print(f"perf gate OK: {checked} gated metrics within tolerance "
+          f"({args.tolerance:.0%} ratio drop, zero access growth)")
+    return 0
+
+
+def _count_gated(key: str, value) -> int:
+    if isinstance(value, dict):
+        return sum(_count_gated(k, v) for k, v in value.items())
+    return int(_is_ratio_key(key) or key in COUNTER_KEYS)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

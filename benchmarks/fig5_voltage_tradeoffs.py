@@ -1,7 +1,6 @@
 """Paper Fig. 5: precharged (scheme 1) vs charge-per-op (scheme 2) voltage
 sensing. (a) energy vs CiM op frequency — crossover at 7.53 MHz;
 (b) energy vs CiM parallelism P — crossover at ~42%."""
-import numpy as np
 
 from repro.core import energy
 

@@ -10,9 +10,14 @@ Sections:
   macro — the planner's multiply / matmul schedules: access counts (asserted
     equal to the ledger's), and fused (intermediates stay in-array) vs
     unfused (operands re-streamed per scheduled access) traffic.
+  bank_sweep — the banked array substrate: the same fused op placed on 1 to
+    64 banks; words/access stays fixed by the geometry while the serialized
+    wave count (and with it the contention-adjusted EDP) drops with bank
+    count. Also asserts the compiled-schedule cache serves repeats.
 
 `--json [PATH]` additionally writes the metrics as BENCH_kernel.json for CI
-artifact tracking of the perf trajectory per PR.
+artifact tracking of the perf trajectory per PR; `benchmarks/
+check_regression.py` gates CI on the committed baseline of that file.
 """
 import argparse
 import json
@@ -23,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import cim
-from repro.cim import PlanePack, planner
+from repro.cim import ArraySpec, PlanePack, dispatch, planner
 
 #: the fused request: Boolean fn + subtraction + comparison, one access
 FUSED_OPS = ("xor", "sub", "lt", "eq")
@@ -166,6 +171,72 @@ def macro_section(metrics):
     metrics["macro_matmul"]["projected_edp_decrease_pct"] = proj["edp_decrease_pct"]
 
 
+def bank_sweep_section(metrics):
+    """The banked substrate: fixed workload, bank count 1 -> 64.
+
+    Geometry holds tile size constant (one 4096-word bank activation), so
+    words/access is flat across the sweep; what banks buy is CONCURRENCY —
+    the serialized wave count drops ~1/banks and the contention-adjusted
+    EDP projection improves with it. Assertions pin the cache hit path and
+    the monotone wave shrink so regressions fail loudly.
+    """
+    n_bits, n_words = 16, 1 << 18
+    rng = np.random.RandomState(3)
+    a = jnp.array(rng.randint(-2**15, 2**15, n_words), jnp.int32)
+    b = jnp.array(rng.randint(-2**15, 2**15, n_words), jnp.int32)
+    pa, pb = PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits)
+    led = cim.ledger()
+
+    sweep = {}
+    prev_waves = None
+    for banks in (1, 2, 4, 8, 16, 32, 64):
+        spec = ArraySpec(banks=banks, subarrays=1, bitline_words=4096)
+        led.reset()
+        dispatch.execute_tiled(pa, pb, FUSED_OPS, spec=spec,
+                               backend="jnp-boolean")
+        rep = led.bank_report(spec)
+        words_per_access = n_words / led.accesses
+        print(f"bank_sweep_waves,{banks},{rep['waves']:.0f},"
+              f"serialized activations on the busiest bank")
+        print(f"bank_sweep_words_per_access,{banks},{words_per_access:.0f},"
+              f"fixed by tile geometry")
+        print(f"bank_sweep_cim_edp,{banks},{rep['cim_edp']:.0f},"
+              f"contention-adjusted (energy x serialized latency)")
+        print(f"bank_sweep_edp_decrease_pct,{banks},"
+              f"{rep['edp_decrease_pct']:.2f},vs near-memory on same banks")
+        assert prev_waves is None or rep["waves"] <= prev_waves, \
+            (banks, rep["waves"], prev_waves)
+        prev_waves = rep["waves"]
+        sweep[str(banks)] = {
+            "accesses": led.accesses,
+            "waves": rep["waves"],
+            "words_per_access": words_per_access,
+            "utilization": rep["utilization"],
+            "cim_edp": rep["cim_edp"],
+            "edp_decrease_pct": rep["edp_decrease_pct"],
+        }
+
+    # the compiled-schedule cache: the sweep re-dispatched is all hits
+    # (same ops / n_bits / tile shape / backend for every bank count)
+    before = dispatch.cache_stats()
+    for banks in (1, 2, 4, 8, 16, 32, 64):
+        spec = ArraySpec(banks=banks, subarrays=1, bitline_words=4096)
+        dispatch.execute_tiled(pa, pb, FUSED_OPS, spec=spec,
+                               backend="jnp-boolean")
+    after = dispatch.cache_stats()
+    hits = after["hits"] - before["hits"]
+    misses = after["misses"] - before["misses"]
+    print(f"bank_sweep_cache_hits,{hits},{misses},"
+          f"repeat schedules skip retracing")
+    assert hits == 7 and misses == 0, (before, after)
+    metrics["bank_sweep"] = {
+        "n_words": n_words,
+        "banks": sweep,
+        "cache_repeat_hits": hits,
+        "cache_repeat_misses": misses,
+    }
+
+
 def main(argv=()):
     # argv defaults to () so programmatic callers (benchmarks.run) never
     # inherit the host process's CLI; __main__ passes sys.argv explicitly
@@ -178,6 +249,7 @@ def main(argv=()):
     metrics = {}
     engine_section(metrics)
     macro_section(metrics)
+    bank_sweep_section(metrics)
 
     if args.json:
         with open(args.json, "w") as f:

@@ -4,7 +4,6 @@ traffic bench + the roofline report. Prints ``name,key,value,note`` CSV.
   PYTHONPATH=src python -m benchmarks.run [--only fig4|fig5|fig6|fig7|kernel|roofline]
 """
 import argparse
-import sys
 
 from . import (
     fig4_current_sensing,

@@ -16,7 +16,6 @@ from repro.core import (
     cim_compare,
     cim_sub,
     current_sensing,
-    edp_summary,
     frequency_crossover_hz,
     parallelism_crossover,
     voltage_scheme1,

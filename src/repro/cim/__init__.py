@@ -17,14 +17,37 @@ any registered backend:
                 explicit access Schedules (the cost model IS the plan)
   macro       — schedule executors: multiply, abs/relu/min/max, popcount,
                 tree reduce_sum, int8 dot/matmul — all in the packed domain
-  accounting  — per-op energy ledger wired through repro.core.energy
+  accounting  — per-op energy ledger wired through repro.core.energy,
+                extended with per-(device, bank) activation slots and a
+                contention-adjusted EDP projection
+  array       — banked physical geometry: ArraySpec (banks x subarrays x
+                rows x bitline words) and TilePlan placement
+  dispatch    — tiling dispatcher: bank-sized tiles vmapped over the fused
+                kernel, compiled-schedule cache (hit/miss counters), and a
+                shard_map path over the launch/mesh meshes
 
 Layering: repro.core holds the physics (device model, sensing, gate-level
 modules, calibrated energy model) and remains the semantic oracle; repro.cim
 is the execution engine every caller dispatches through.
 """
-from . import accounting, backends, engine, macro, opset, planner  # noqa: F401
+from . import (  # noqa: F401
+    accounting,
+    array,
+    backends,
+    dispatch,
+    engine,
+    macro,
+    opset,
+    planner,
+)
 from .accounting import LEDGER, Ledger, ledger, project_savings  # noqa: F401
+from .array import DEFAULT_SPEC, ArraySpec, TilePlan  # noqa: F401
+from .dispatch import (  # noqa: F401
+    cache_stats,
+    clear_schedule_cache,
+    execute_sharded,
+    execute_tiled,
+)
 from .backends import (  # noqa: F401
     available_backends,
     default_backend_name,

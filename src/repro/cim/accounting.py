@@ -7,6 +7,15 @@ projects array-level energy/latency/EDP through the calibrated paper model
 paper's single-access claim — while the unfused baseline charges one access
 per pass, so the ledger difference IS the paper's headline saving.
 
+The banked substrate (repro.cim.array / repro.cim.dispatch) extends the
+model to physical geometry: `charge_banked` attributes one activation per
+tile to its (device, bank) slot, tracks activated-but-idle words (the last
+tile's empty bitline columns) and inter-bank reduction traffic, and
+`bank_report` turns those into a contention-adjusted EDP projection —
+energy follows ACTIVATED words (idle columns still burn bitline energy),
+latency follows the busiest bank's wave count (banks run concurrently,
+waves serialize).
+
 Charging happens at Python trace time: under jit, a call site is charged once
 per compilation, not once per device execution. That is the right granularity
 for the model-level projections here (per-op costs are multiplied out by the
@@ -19,14 +28,31 @@ from typing import Dict, Tuple
 
 from repro.core import energy
 
+#: modeled interconnect cost of moving one 32-bit word between banks during
+#: a cross-tile reduction step (internal units — fractions of one standard
+#: 1024-row read energy / latency; a NoC hop is cheap next to an activation)
+E_HOP_WORD32 = 0.05
+T_HOP_WORD32 = 0.01
+
 
 @dataclasses.dataclass
 class Ledger:
-    """Counts of ADRA accesses executed through the engine."""
+    """Counts of ADRA accesses executed through the engine.
+
+    bank_accesses      : activations per (device, bank) slot; the unbanked
+                         engine path charges slot (0, 0).
+    activated_words32  : 32-bit-word slots ACTIVATED (incl. the idle columns
+                         of partially-filled tiles) — >= words32.
+    inter_bank_words32 : words crossing banks in reduction steps.
+    """
 
     accesses: int = 0
     words32: float = 0.0          # 32-bit-word-equivalent ops charged
     per_op: Dict[str, int] = dataclasses.field(default_factory=dict)
+    bank_accesses: Dict[Tuple[int, int], int] = dataclasses.field(
+        default_factory=dict)
+    activated_words32: float = 0.0
+    inter_bank_words32: float = 0.0
     enabled: bool = True
 
     def charge(self, ops: Tuple[str, ...], n_bits: int, n_words: int,
@@ -35,17 +61,109 @@ class Ledger:
             return
         self.accesses += accesses
         self.words32 += n_words * n_bits / 32.0 * accesses
+        self.activated_words32 += n_words * n_bits / 32.0 * accesses
+        self.bank_accesses[(0, 0)] = \
+            self.bank_accesses.get((0, 0), 0) + accesses
         for op in ops:
             self.per_op[op] = self.per_op.get(op, 0) + 1
 
+    def charge_banked(self, ops: Tuple[str, ...], n_bits: int, n_words: int,
+                      plan, n_devices: int = 1) -> None:
+        """One logical op executed as `plan.n_tiles` bank activations.
+
+        The word-work (words32) is charged once — tiling does not multiply
+        the useful work — while activations land on their (device, bank)
+        slots and the last tile's idle columns count as activated words.
+        """
+        if not self.enabled:
+            return
+        self.accesses += plan.n_tiles
+        self.words32 += n_words * n_bits / 32.0
+        self.activated_words32 += \
+            plan.n_tiles * plan.tile_words * n_bits / 32.0
+        for slot, n in plan.bank_counts(n_devices).items():
+            self.bank_accesses[slot] = self.bank_accesses.get(slot, 0) + n
+        for op in ops:
+            self.per_op[op] = self.per_op.get(op, 0) + 1
+
+    def charge_reduction(self, words32: float) -> None:
+        """Inter-bank traffic of a cross-tile reduction step."""
+        if not self.enabled:
+            return
+        self.inter_bank_words32 += words32
+
     def reset(self) -> None:
-        self.accesses = 0
-        self.words32 = 0.0
-        self.per_op.clear()
+        """Restore every counter to its dataclass default.
+
+        Introspective on purpose: a hand-written field list silently stops
+        clearing newly added counters (per-op breakdowns, the per-bank slots
+        here) the day someone forgets to extend it — covered by
+        tests/test_cim_array.py::test_ledger_reset_clears_every_field.
+        """
+        for f in dataclasses.fields(self):
+            if f.name == "enabled":
+                continue
+            if f.default is not dataclasses.MISSING:
+                setattr(self, f.name, f.default)
+            else:
+                setattr(self, f.name, f.default_factory())
+
+    def per_device(self) -> Dict[int, int]:
+        """Activations per device (sum of that device's bank slots)."""
+        out: Dict[int, int] = {}
+        for (dev, _bank), n in self.bank_accesses.items():
+            out[dev] = out.get(dev, 0) + n
+        return out
 
     def projected(self, scheme: str = "current", rows: int = 1024) -> Dict[str, float]:
         """Array-level projection of the charged work through the paper model."""
         return project_savings(self.words32, scheme=scheme, rows=rows)
+
+    def bank_report(self, spec, scheme: str = "current",
+                    rows: int = 1024) -> Dict[str, float]:
+        """Contention-adjusted EDP projection for the charged bank traffic.
+
+        Energy side: every ACTIVATED word burns the per-word CiM energy
+        (idle columns of a partial tile included), plus E_HOP_WORD32 per
+        inter-bank reduction word. Latency side: banks across all devices
+        run concurrently, so the critical path is the busiest slot's wave
+        count; reduction hops serialize behind the interconnect. The
+        baseline is the same word-work through the two-access near-memory
+        path on the same geometry.
+        """
+        res = _SCHEMES[scheme](rows)
+        total = sum(self.bank_accesses.values()) or 1
+        waves = max(self.bank_accesses.values(), default=1)
+        devices = 1 + max((d for d, _ in self.bank_accesses), default=0)
+        slots = spec.banks * devices
+        ideal_waves = -(-total // slots)
+        per_access_words = self.activated_words32 / total
+
+        e_cim = res.cim.energy * self.activated_words32 \
+            + E_HOP_WORD32 * self.inter_bank_words32
+        t_cim = res.cim.latency * waves \
+            + T_HOP_WORD32 * self.inter_bank_words32 / max(1, slots)
+        e_base = res.baseline.energy * self.activated_words32
+        t_base = res.baseline.latency * waves
+        base_edp = e_base * t_base
+        return {
+            "banks": float(spec.banks),
+            "devices": float(devices),
+            "activations": float(total),
+            "waves": float(waves),
+            "ideal_waves": float(ideal_waves),
+            "contention_factor": waves / max(1, ideal_waves),
+            "utilization": self.words32 / max(1e-12, self.activated_words32),
+            "words_per_access": per_access_words,
+            "inter_bank_words32": self.inter_bank_words32,
+            "cim_energy": e_cim,
+            "cim_latency": t_cim,
+            "cim_edp": e_cim * t_cim,
+            "baseline_edp": base_edp,
+            # 0.0 on an empty/reset ledger (no charged work -> no saving)
+            "edp_decrease_pct": (100.0 * (1.0 - (e_cim * t_cim) / base_edp)
+                                 if base_edp else 0.0),
+        }
 
 
 #: process-wide ledger the engine charges into

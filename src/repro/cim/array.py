@@ -1,0 +1,139 @@
+"""Banked CiM array substrate: physical geometry + tile placement.
+
+The engine (repro.cim.engine) treats the memory as one infinitely wide
+array; real ADRA arrays are banks of subarrays of rows x bitlines. This
+module is the geometry layer between the two: an `ArraySpec` describes the
+physical array, and its `plan()` method turns any operand word count into a
+`TilePlan` — which words go to which bank activation — that the tiling
+dispatcher (repro.cim.dispatch) executes and the accounting ledger charges.
+
+Layout convention (the engine's transposed bit-serial form): inside a
+subarray each bitline column holds ONE word and row p holds bit-plane p, so
+one dual-row activation computes over `bitline_words` words in parallel and
+the operand/result plane stacks occupy rows. A bank activation drives all
+of its subarrays at once (shared wordline drivers), so one bank serves
+`subarrays * bitline_words` words per access; banks operate concurrently,
+and tiles beyond `banks` per round serialize into waves — the contention
+the per-bank ledger model charges.
+
+Defaults are calibrated to the paper's 1024-row FeFET array
+(1024 x 1024 subarray => 1024 words per subarray activation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+from . import opset
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    """Physical geometry of a banked ADRA CiM array.
+
+    banks          : independently activatable banks (concurrent).
+    subarrays      : subarrays per bank, activated together per access.
+    rows           : wordlines per subarray — bounds the plane budget of one
+                     access (two operand stacks + every requested output).
+    bitline_words  : words served per subarray activation (one word per
+                     bitline column in the transposed bit-serial layout);
+                     must be a multiple of 32 so tiles align with the packed
+                     uint32 lanes of PlanePack.
+    """
+
+    banks: int = 4
+    subarrays: int = 4
+    rows: int = 1024
+    bitline_words: int = 1024
+
+    def __post_init__(self):
+        if self.banks < 1 or self.subarrays < 1 or self.rows < 1:
+            raise opset.CimOpError(f"degenerate ArraySpec: {self}")
+        if self.bitline_words < 32 or self.bitline_words % 32:
+            raise opset.CimOpError(
+                f"bitline_words must be a positive multiple of 32 (packed "
+                f"uint32 lanes), got {self.bitline_words}")
+
+    @property
+    def tile_words(self) -> int:
+        """Words one bank activation serves = the tiling granule."""
+        return self.subarrays * self.bitline_words
+
+    @property
+    def parallel_words(self) -> int:
+        """Words the whole array serves per wave (all banks active)."""
+        return self.banks * self.tile_words
+
+    def check_fits(self, n_bits: int, ops: Sequence[str]) -> None:
+        """One access must fit its operand + result planes in the rows of a
+        subarray: 2 operand stacks of n_bits plus every requested output."""
+        need = 2 * n_bits + sum(opset.out_rows(op, n_bits) for op in ops)
+        if need > self.rows:
+            raise opset.CimOpError(
+                f"access needs {need} rows (2x{n_bits} operand planes + "
+                f"outputs {tuple(ops)}) but subarrays have {self.rows}")
+
+    def plan(self, n_words: int) -> "TilePlan":
+        if n_words < 1:
+            raise opset.CimOpError(f"cannot place {n_words} words")
+        n_tiles = -(-n_words // self.tile_words)
+        return TilePlan(n_words=n_words, tile_words=self.tile_words,
+                        n_tiles=n_tiles, banks=self.banks)
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """Placement of an operand pair onto a banked array: tile t covers words
+    [t * tile_words, (t+1) * tile_words) and runs on bank `t % banks` during
+    wave `(t // banks)` — round-robin, the layout that balances banks best
+    for contiguous operands. Static and hashable: it is part of the
+    compiled-schedule cache key."""
+
+    n_words: int
+    tile_words: int
+    n_tiles: int
+    banks: int
+
+    @property
+    def lanes_per_tile(self) -> int:
+        return self.tile_words // 32
+
+    @property
+    def waves(self) -> int:
+        """Sequential activations on the busiest bank (the critical path)."""
+        return -(-self.n_tiles // self.banks)
+
+    @property
+    def pad_words(self) -> int:
+        """Idle bitline columns of the last tile (activated but operand-less)."""
+        return self.n_tiles * self.tile_words - self.n_words
+
+    def bank_of(self, tile: int) -> int:
+        return tile % self.banks
+
+    def bank_counts(self, n_devices: int = 1) -> Dict[Tuple[int, int], int]:
+        """Activations per (device, bank) — what the ledger charges.
+
+        Closed-form: device d owns the contiguous tile block [d*per_dev,
+        min((d+1)*per_dev, n_tiles)) and bank b takes every tile ≡ b mod
+        banks inside it, so each slot is a count of a residue class in a
+        range — O(devices * banks), never O(n_tiles) (model-scale operands
+        place hundreds of thousands of tiles per schedule step)."""
+        def upto(x: int, b: int) -> int:
+            # tiles t in [0, x) with t % banks == b  (0 <= b < banks)
+            return (x - b + self.banks - 1) // self.banks
+
+        per_dev = -(-self.n_tiles // n_devices)
+        counts: Dict[Tuple[int, int], int] = {}
+        for d in range(n_devices):
+            lo = min(d * per_dev, self.n_tiles)
+            hi = min(lo + per_dev, self.n_tiles)
+            for b in range(self.banks):
+                n = upto(hi, b) - upto(lo, b)
+                if n:
+                    counts[(d, b)] = n
+        return counts
+
+
+#: the paper's array, four banks of four subarrays
+DEFAULT_SPEC = ArraySpec()

@@ -1,0 +1,181 @@
+"""Tiling dispatcher: run any PlanePack op request on a banked array.
+
+`execute_tiled` splits an operand pair into bank-sized tiles (ArraySpec /
+TilePlan from repro.cim.array), vmaps the fused backend over the tile axis,
+and stitches the outputs back together — bit-exact with the untiled engine,
+because elementwise CiM ops touch each word independently and tiles cut the
+packed lane axis on uint32 boundaries.
+
+Two substrate services live here as well:
+
+  * a compiled-schedule cache, keyed by (ops, n_bits, tile shape, backend,
+    placement): repeated planner schedules reuse the jitted, vmapped (and
+    possibly shard_mapped) program instead of retracing a fresh closure per
+    call. `cache_stats()` exposes hit/miss counters; benchmarks assert the
+    hit path.
+  * a `jax.shard_map` path over the production/smoke meshes of
+    repro.launch.mesh: pass `mesh=` and tiles are block-distributed over the
+    mesh's "data" axis, each device executing (and its ledger slice being
+    charged for) only its own bank activations — multi-device execution with
+    no other caller changes.
+
+The ledger is charged per (device, bank) activation (see
+repro.cim.accounting), which is what makes the contention-adjusted EDP
+projection and the per-device ledger sum-check possible.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import engine, opset
+from .accounting import LEDGER
+from .array import DEFAULT_SPEC, ArraySpec, TilePlan
+from .backends import Backend, get_backend
+from .planepack import PlanePack
+
+
+def _shard_map(body, mesh, in_specs, out_specs):
+    """Version-portable shard_map (jax>=0.6: jax.shard_map/check_vma;
+    older: jax.experimental.shard_map/check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# compiled-schedule cache
+# ---------------------------------------------------------------------------
+
+_PROGRAMS: Dict[tuple, object] = {}
+_HITS = 0
+_MISSES = 0
+
+
+def cache_stats() -> Dict[str, int]:
+    """Hit/miss counters of the compiled-schedule cache."""
+    return {"hits": _HITS, "misses": _MISSES, "entries": len(_PROGRAMS)}
+
+
+def clear_schedule_cache() -> None:
+    global _HITS, _MISSES
+    _PROGRAMS.clear()
+    _HITS = 0
+    _MISSES = 0
+
+
+def _cached_program(ops: Tuple[str, ...], n_bits: int, tile_shape: tuple,
+                    bk: Backend, mesh, axis: Optional[str]):
+    """The jitted tiled program for one schedule key.
+
+    Without the cache every call would close over a fresh lambda and retrace
+    under jit; with it, a repeated (ops, n_bits, tile_shape, backend[,mesh])
+    schedule reuses the compiled executable."""
+    global _HITS, _MISSES
+    # the mesh object itself (hashable) is the key component: two meshes of
+    # identical shape over DIFFERENT devices must not share a program
+    key = (ops, n_bits, tile_shape, bk.name,
+           None if mesh is None else (mesh, axis))
+    prog = _PROGRAMS.get(key)
+    if prog is not None:
+        _HITS += 1
+        return prog
+    _MISSES += 1
+
+    def tiled(ta, tb):
+        return jax.vmap(lambda ap, bp: bk.fn(ap, bp, ops))(ta, tb)
+
+    if mesh is None:
+        prog = jax.jit(tiled)
+    else:
+        from jax.sharding import PartitionSpec as P
+
+        spec3 = P(axis, None, None)
+        prog = jax.jit(_shard_map(tiled, mesh,
+                                  in_specs=(spec3, spec3),
+                                  out_specs=tuple(spec3 for _ in ops)))
+    _PROGRAMS[key] = prog
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# tile / untile (packed lane axis, uint32 boundaries)
+# ---------------------------------------------------------------------------
+
+
+def _tile(planes: jax.Array, plan: TilePlan, n_tiles: int) -> jax.Array:
+    """uint32[n_bits, W] -> uint32[n_tiles, n_bits, lanes_per_tile]."""
+    n_bits, w = planes.shape
+    pad = n_tiles * plan.lanes_per_tile - w
+    if pad:
+        planes = jnp.pad(planes, ((0, 0), (0, pad)))
+    return planes.reshape(n_bits, n_tiles, plan.lanes_per_tile) \
+                 .transpose(1, 0, 2)
+
+
+def _untile(raw: jax.Array, w: int) -> jax.Array:
+    """uint32[n_tiles, rows, lanes] -> uint32[rows, W] (pad lanes dropped)."""
+    n_tiles, rows, lanes = raw.shape
+    return raw.transpose(1, 0, 2).reshape(rows, n_tiles * lanes)[:, :w]
+
+
+# ---------------------------------------------------------------------------
+# the dispatcher
+# ---------------------------------------------------------------------------
+
+
+def execute_tiled(a: PlanePack, b: PlanePack, ops: Sequence[str],
+                  spec: Optional[ArraySpec] = None,
+                  backend: Optional[str] = None,
+                  mesh=None, axis: str = "data") -> engine.Outputs:
+    """One logical ADRA access on a banked array: bank-sized tiles, vmapped
+    (and, with `mesh`, shard_mapped over its `axis`) over the fused backend.
+
+    Bit-exact with engine.execute; the difference is physical: the ledger is
+    charged one activation per tile, attributed to (device, bank), and the
+    last tile's idle columns are charged as activated-but-idle words.
+    """
+    a, b, ops = engine.prepare_operands(a, b, ops)
+    spec = spec or DEFAULT_SPEC
+    spec.check_fits(a.n_bits, ops)
+    plan = spec.plan(a.n_words)
+
+    n_devices = 1
+    exec_tiles = plan.n_tiles
+    if mesh is not None:
+        if axis not in mesh.axis_names:
+            raise opset.CimOpError(
+                f"mesh has axes {mesh.axis_names}, no {axis!r}")
+        n_devices = int(mesh.shape[axis])
+        # block placement: pad the tile axis so every device owns the same
+        # number of tiles; pad tiles hold no operands and are not charged
+        exec_tiles = -(-plan.n_tiles // n_devices) * n_devices
+
+    bk = get_backend(backend)
+    ta = _tile(a.planes, plan, exec_tiles)
+    tb = _tile(b.planes, plan, exec_tiles)
+    prog = _cached_program(ops, a.n_bits, tuple(ta.shape[1:]), bk,
+                           mesh, axis if mesh is not None else None)
+    raws = prog(ta, tb)
+
+    LEDGER.charge_banked(ops, a.n_bits, a.n_words, plan,
+                         n_devices=n_devices)
+    w = a.planes.shape[1]
+    return {op: engine._wrap(op, _untile(raw, w), a.n_bits, a.shape)
+            for op, raw in zip(ops, raws)}
+
+
+def execute_sharded(a: PlanePack, b: PlanePack, ops: Sequence[str], mesh,
+                    spec: Optional[ArraySpec] = None,
+                    backend: Optional[str] = None,
+                    axis: str = "data") -> engine.Outputs:
+    """`execute_tiled` with a mandatory mesh (the multi-device entry point —
+    make_smoke_mesh / make_production_mesh from repro.launch.mesh)."""
+    return execute_tiled(a, b, ops, spec=spec, backend=backend,
+                         mesh=mesh, axis=axis)

@@ -31,14 +31,12 @@ def _wrap(op: str, raw: jax.Array, n_bits: int,
                      shape=shape)
 
 
-def execute(a: PlanePack, b: PlanePack, ops: Sequence[str],
-            backend: Optional[str] = None) -> Outputs:
-    """One ADRA access: every requested op from a single streamed pass.
+def prepare_operands(a: PlanePack, b: PlanePack, ops: Sequence[str]
+                     ) -> Tuple[PlanePack, PlanePack, Tuple[str, ...]]:
+    """Validate an op request and align its operands in the packed domain.
 
-    Operands of different widths are sign/zero-extended in the packed domain
-    first. Returns {op: PlanePack}; predicates come back as 1-plane unsigned
-    packs (unpack() gives 0/1 per word).
-    """
+    Shared by the single-array `execute` below and the banked tiling
+    dispatcher (repro.cim.dispatch), so both paths see identical widening."""
     ops = opset.validate_ops(tuple(ops))
     if a.shape != b.shape:
         raise opset.CimOpError(f"operand shapes differ: {a.shape} vs {b.shape}")
@@ -51,6 +49,18 @@ def execute(a: PlanePack, b: PlanePack, ops: Sequence[str],
         # with the top bit set cannot be misread as negative
         n = a.n_bits + 1
         a, b = a.extend_to(n), b.extend_to(n)
+    return a, b, ops
+
+
+def execute(a: PlanePack, b: PlanePack, ops: Sequence[str],
+            backend: Optional[str] = None) -> Outputs:
+    """One ADRA access: every requested op from a single streamed pass.
+
+    Operands of different widths are sign/zero-extended in the packed domain
+    first. Returns {op: PlanePack}; predicates come back as 1-plane unsigned
+    packs (unpack() gives 0/1 per word).
+    """
+    a, b, ops = prepare_operands(a, b, ops)
     bk = get_backend(backend)
     raws = bk(a.planes, b.planes, ops)
     LEDGER.charge(ops, a.n_bits, a.n_words, accesses=1)

@@ -30,7 +30,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import engine, opset, planner
+from . import dispatch, engine, opset, planner
+from .accounting import LEDGER
+from .array import ArraySpec
 from .opset import CimOpError
 from .planepack import PlanePack
 
@@ -40,13 +42,22 @@ class ScheduleCursor:
 
     This is the accounting guarantee: a macro CANNOT issue an access its
     plan does not contain, so ledger accesses == schedule.accesses holds by
-    construction, not by convention.
+    construction, not by convention. With an ArraySpec the cursor routes
+    every access through the banked tiling dispatcher instead of the
+    infinite-array engine — each planned step then costs `plan.n_tiles`
+    bank activations and the guarantee becomes ledger accesses ==
+    schedule.placed_accesses. A mesh additionally spreads the tiles over
+    its "data" axis via shard_map.
     """
 
     def __init__(self, schedule: planner.Schedule,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 spec: Optional[ArraySpec] = None,
+                 mesh=None):
         self.schedule = schedule
         self.backend = backend
+        self.spec = spec
+        self.mesh = mesh
         self._i = 0
 
     def step(self) -> planner.Step:
@@ -64,7 +75,10 @@ class ScheduleCursor:
                 f"{self.schedule.macro}: access {self._i} executes {ops!r} "
                 f"but the plan says {step.ops!r}")
         self._i += 1
-        return engine.execute(a, b, step.ops, backend=self.backend)
+        if self.spec is None:
+            return engine.execute(a, b, step.ops, backend=self.backend)
+        return dispatch.execute_tiled(a, b, step.ops, spec=self.spec,
+                                      backend=self.backend, mesh=self.mesh)
 
     def remaining(self) -> Tuple[planner.Step, ...]:
         return self.schedule.steps[self._i:]
@@ -74,6 +88,17 @@ class ScheduleCursor:
             raise CimOpError(
                 f"{self.schedule.macro}: executed {self._i} of "
                 f"{self.schedule.accesses} planned accesses")
+
+
+
+def _cursor(sched: planner.Schedule, n_words: int,
+            backend: Optional[str], spec: Optional[ArraySpec],
+            mesh) -> ScheduleCursor:
+    """Place a schedule on the banked geometry (when given) and open its
+    cursor — the single spot where placement meets execution."""
+    if spec is not None:
+        sched = sched.placed(spec, n_words)
+    return ScheduleCursor(sched, backend, spec=spec, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -139,12 +164,14 @@ def _multiply_with(cur: ScheduleCursor, a: PlanePack,
 
 
 def multiply(a: PlanePack, b: PlanePack,
-             backend: Optional[str] = None) -> PlanePack:
-    """Exact product, (n_a + n_b)-plane result, 2*n_b - 1 accesses."""
+             backend: Optional[str] = None,
+             spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
+    """Exact product, (n_a + n_b)-plane result, 2*n_b - 1 accesses (times
+    the tile count when placed on a banked `spec`)."""
     if a.shape != b.shape:
         raise CimOpError(f"operand shapes differ: {a.shape} vs {b.shape}")
     sched = planner.plan_multiply(a.n_bits, b.n_bits, signed_b=b.signed)
-    cur = ScheduleCursor(sched, backend)
+    cur = _cursor(sched, a.n_words, backend, spec, mesh)
     out = _multiply_with(cur, a, b)
     cur.finish()
     return out
@@ -155,19 +182,23 @@ def multiply(a: PlanePack, b: PlanePack,
 # ---------------------------------------------------------------------------
 
 
-def abs_(a: PlanePack, backend: Optional[str] = None) -> PlanePack:
+def abs_(a: PlanePack, backend: Optional[str] = None,
+         spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
     """|a| in one access: (0 - a, 0 < a) together, then select a vs -a.
     Result is (n+1)-plane so abs(INT_MIN) is exact."""
-    cur = ScheduleCursor(planner.plan_abs(a.n_bits), backend)
+    cur = _cursor(planner.plan_abs(a.n_bits), a.n_words, backend, spec,
+                  mesh)
     zero = PlanePack.zeros_like(a)
     out = cur.execute(zero, a, ("sub", "lt"))
     cur.finish()
     return select(out["lt"], a, out["sub"])
 
 
-def relu(a: PlanePack, backend: Optional[str] = None) -> PlanePack:
+def relu(a: PlanePack, backend: Optional[str] = None,
+         spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
     """max(a, 0) in one access: the a > 0 predicate gates the writeback."""
-    cur = ScheduleCursor(planner.plan_relu(a.n_bits), backend)
+    cur = _cursor(planner.plan_relu(a.n_bits), a.n_words, backend, spec,
+                  mesh)
     zero = PlanePack.zeros_like(a)
     out = cur.execute(a, zero, ("gt",))
     cur.finish()
@@ -175,16 +206,20 @@ def relu(a: PlanePack, backend: Optional[str] = None) -> PlanePack:
 
 
 def minimum(a: PlanePack, b: PlanePack,
-            backend: Optional[str] = None) -> PlanePack:
-    cur = ScheduleCursor(planner.plan_minimum(max(a.n_bits, b.n_bits)), backend)
+            backend: Optional[str] = None,
+            spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
+    cur = _cursor(planner.plan_minimum(max(a.n_bits, b.n_bits)),
+                  a.n_words, backend, spec, mesh)
     out = cur.execute(a, b, ("lt",))
     cur.finish()
     return select(out["lt"], a, b)
 
 
 def maximum(a: PlanePack, b: PlanePack,
-            backend: Optional[str] = None) -> PlanePack:
-    cur = ScheduleCursor(planner.plan_maximum(max(a.n_bits, b.n_bits)), backend)
+            backend: Optional[str] = None,
+            spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
+    cur = _cursor(planner.plan_maximum(max(a.n_bits, b.n_bits)),
+                  a.n_words, backend, spec, mesh)
     out = cur.execute(a, b, ("gt",))
     cur.finish()
     return select(out["gt"], a, b)
@@ -195,10 +230,12 @@ def maximum(a: PlanePack, b: PlanePack,
 # ---------------------------------------------------------------------------
 
 
-def popcount(a: PlanePack, backend: Optional[str] = None) -> PlanePack:
+def popcount(a: PlanePack, backend: Optional[str] = None,
+             spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
     """Set bits of each word's n-bit two's-complement pattern: pairwise
     plane tree, n - 1 add accesses."""
-    cur = ScheduleCursor(planner.plan_popcount(a.n_bits), backend)
+    cur = _cursor(planner.plan_popcount(a.n_bits), a.n_words, backend,
+                  spec, mesh)
     level = [PlanePack(planes=a.planes[i:i + 1], n_bits=1, signed=False,
                        shape=a.shape)
              for i in range(a.n_bits)]
@@ -215,20 +252,32 @@ def popcount(a: PlanePack, backend: Optional[str] = None) -> PlanePack:
 def _reduce_with(cur: ScheduleCursor, acc: PlanePack) -> PlanePack:
     """Log-stride reduction: each planned step shifts the row buffer by its
     stride and adds, so element 0 of each segment accumulates the segment
-    sum; exactness relies on the pack's zero padding past the last word."""
+    sum; exactness relies on the pack's zero padding past the last word.
+
+    On a banked cursor the shift moves words BETWEEN tiles whenever the
+    stride reaches across a tile boundary — that movement is the inter-bank
+    reduction traffic the ledger charges (fraction of words crossing scales
+    with stride/tile_words, capped at all of them)."""
     if not acc.signed:
         acc = acc.extend_to(acc.n_bits + 1).as_signed(True)
     for step in cur.remaining():
+        if cur.spec is not None and step.stride:
+            plan = cur.spec.plan(acc.n_words)
+            if plan.n_tiles > 1:
+                frac = min(1.0, step.stride / plan.tile_words)
+                LEDGER.charge_reduction(
+                    acc.n_words * frac * acc.n_bits / 32.0)
         shifted = acc.shift_elements(step.stride)
         acc = cur.execute(acc, shifted, ("add",))["add"]
     return acc
 
 
-def reduce_sum(a: PlanePack, backend: Optional[str] = None) -> PlanePack:
+def reduce_sum(a: PlanePack, backend: Optional[str] = None,
+               spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
     """Sum of ALL logical elements, ceil(log2(n_words)) accesses; returns a
     scalar-shaped pack (element 0 of the tree)."""
-    cur = ScheduleCursor(planner.plan_reduce_sum(a.n_words, stride=1,
-                                                 n_bits=a.n_bits), backend)
+    sched = planner.plan_reduce_sum(a.n_words, stride=1, n_bits=a.n_bits)
+    cur = _cursor(sched, a.n_words, backend, spec, mesh)
     acc = _reduce_with(cur, a)
     cur.finish()
     return PlanePack(planes=acc.planes, n_bits=acc.n_bits,
@@ -241,7 +290,8 @@ def reduce_sum(a: PlanePack, backend: Optional[str] = None) -> PlanePack:
 
 
 def matmul(a: jax.Array, b: jax.Array, n_bits: int = 8,
-           backend: Optional[str] = None) -> jax.Array:
+           backend: Optional[str] = None,
+           spec: Optional[ArraySpec] = None, mesh=None) -> jax.Array:
     """Exact intN x intN -> int32 matmul through the CiM array.
 
     a : int [M, K], b : int [K, N], entries representable in n_bits signed.
@@ -264,7 +314,7 @@ def matmul(a: jax.Array, b: jax.Array, n_bits: int = 8,
         jnp.broadcast_to(b[None, :, :], (m, k, n)).astype(jnp.int32))
 
     sched = planner.plan_matmul(k, n, n_bits=n_bits, signed=True)
-    cur = ScheduleCursor(sched, backend)
+    cur = _cursor(sched, m * k_pad * n, backend, spec, mesh)
     prod = _multiply_with(cur, PlanePack.pack(a_exp, n_bits),
                           PlanePack.pack(b_exp, n_bits))
     acc = _reduce_with(cur, prod)
@@ -276,11 +326,13 @@ def matmul(a: jax.Array, b: jax.Array, n_bits: int = 8,
 
 
 def dot(a: jax.Array, b: jax.Array, n_bits: int = 8,
-        backend: Optional[str] = None) -> jax.Array:
+        backend: Optional[str] = None,
+        spec: Optional[ArraySpec] = None, mesh=None) -> jax.Array:
     """Exact intN x intN -> int32 dot product of two [K] vectors."""
     a = jnp.asarray(a).reshape(1, -1)
     b = jnp.asarray(b).reshape(-1, 1)
-    return matmul(a, b, n_bits=n_bits, backend=backend)[0, 0]
+    return matmul(a, b, n_bits=n_bits, backend=backend,
+                  spec=spec, mesh=mesh)[0, 0]
 
 
 # ---------------------------------------------------------------------------
@@ -290,40 +342,51 @@ def dot(a: jax.Array, b: jax.Array, n_bits: int = 8,
 
 def multiply_ints(x: jax.Array, y: jax.Array, n_bits: int = 16,
                   signed: bool = True,
-                  backend: Optional[str] = None) -> jax.Array:
+                  backend: Optional[str] = None,
+                  spec: Optional[ArraySpec] = None) -> jax.Array:
     p = multiply(PlanePack.pack(x, n_bits, signed=signed),
-                 PlanePack.pack(y, n_bits, signed=signed), backend=backend)
+                 PlanePack.pack(y, n_bits, signed=signed), backend=backend,
+                 spec=spec)
     return p.unpack()
 
 
 def relu_ints(x: jax.Array, n_bits: int = 16,
-              backend: Optional[str] = None) -> jax.Array:
-    return relu(PlanePack.pack(x, n_bits), backend=backend).unpack()
+              backend: Optional[str] = None,
+              spec: Optional[ArraySpec] = None) -> jax.Array:
+    return relu(PlanePack.pack(x, n_bits), backend=backend,
+                spec=spec).unpack()
 
 
 def abs_ints(x: jax.Array, n_bits: int = 16,
-             backend: Optional[str] = None) -> jax.Array:
-    return abs_(PlanePack.pack(x, n_bits), backend=backend).unpack()
+             backend: Optional[str] = None,
+             spec: Optional[ArraySpec] = None) -> jax.Array:
+    return abs_(PlanePack.pack(x, n_bits), backend=backend,
+                spec=spec).unpack()
 
 
 def minimum_ints(x: jax.Array, y: jax.Array, n_bits: int = 16,
-                 backend: Optional[str] = None) -> jax.Array:
+                 backend: Optional[str] = None,
+                 spec: Optional[ArraySpec] = None) -> jax.Array:
     return minimum(PlanePack.pack(x, n_bits), PlanePack.pack(y, n_bits),
-                   backend=backend).unpack()
+                   backend=backend, spec=spec).unpack()
 
 
 def maximum_ints(x: jax.Array, y: jax.Array, n_bits: int = 16,
-                 backend: Optional[str] = None) -> jax.Array:
+                 backend: Optional[str] = None,
+                 spec: Optional[ArraySpec] = None) -> jax.Array:
     return maximum(PlanePack.pack(x, n_bits), PlanePack.pack(y, n_bits),
-                   backend=backend).unpack()
+                   backend=backend, spec=spec).unpack()
 
 
 def popcount_ints(x: jax.Array, n_bits: int = 16,
-                  backend: Optional[str] = None) -> jax.Array:
-    return popcount(PlanePack.pack(x, n_bits), backend=backend).unpack()
+                  backend: Optional[str] = None,
+                  spec: Optional[ArraySpec] = None) -> jax.Array:
+    return popcount(PlanePack.pack(x, n_bits), backend=backend,
+                    spec=spec).unpack()
 
 
 def reduce_sum_ints(x: jax.Array, n_bits: int = 16, signed: bool = True,
-                    backend: Optional[str] = None) -> jax.Array:
+                    backend: Optional[str] = None,
+                    spec: Optional[ArraySpec] = None) -> jax.Array:
     return reduce_sum(PlanePack.pack(x, n_bits, signed=signed),
-                      backend=backend).unpack()
+                      backend=backend, spec=spec).unpack()

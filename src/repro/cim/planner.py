@@ -25,6 +25,7 @@ import dataclasses
 from typing import Dict, Optional, Tuple
 
 from . import opset
+from .array import ArraySpec, TilePlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,15 +49,33 @@ class Step:
 
 @dataclasses.dataclass(frozen=True)
 class Schedule:
-    """An ordered access plan for one macro op."""
+    """An ordered access plan for one macro op.
+
+    `placement` (set by `placed()`) pins the schedule to a banked array
+    geometry: every step then executes as `placement.n_tiles` bank
+    activations through the tiling dispatcher, and `placed_accesses` is the
+    physical activation count the ledger will show.
+    """
 
     macro: str
     steps: Tuple[Step, ...]
     out_bits: int                 # width of the macro's result planes
+    placement: Optional[TilePlan] = None
 
     @property
     def accesses(self) -> int:
         return len(self.steps)
+
+    @property
+    def placed_accesses(self) -> int:
+        """Bank activations when placed (accesses * tiles); logical accesses
+        when not."""
+        tiles = self.placement.n_tiles if self.placement else 1
+        return len(self.steps) * tiles
+
+    def placed(self, spec: ArraySpec, n_words: int) -> "Schedule":
+        """The same schedule carrying its tile placement on `spec`."""
+        return dataclasses.replace(self, placement=spec.plan(n_words))
 
     def op_passes(self) -> Tuple[Tuple[str, ...], ...]:
         return tuple(s.ops for s in self.steps)
@@ -64,7 +83,8 @@ class Schedule:
     def __add__(self, other: "Schedule") -> "Schedule":
         return Schedule(macro=f"{self.macro}+{other.macro}",
                         steps=self.steps + other.steps,
-                        out_bits=max(self.out_bits, other.out_bits))
+                        out_bits=max(self.out_bits, other.out_bits),
+                        placement=self.placement or other.placement)
 
 
 def _log2_ceil(n: int) -> int:

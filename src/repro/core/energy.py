@@ -28,7 +28,6 @@ read at 1024 rows; multiply by T0_NS for nanoseconds. Relative claims
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict
 
 # physical anchor scales (order-of-magnitude for a 45nm 1024-row array)

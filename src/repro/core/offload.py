@@ -74,14 +74,29 @@ class OffloadReport:
     op_histogram: Dict[str, int]
     multi_access_ops: int = 0        # multiply/dot ops lowered by the planner
     planner_accesses: int = 0        # total planned accesses for those ops
+    banked_accesses: int = 0         # bank activations on the given ArraySpec
+    bank_waves: int = 0              # serialized wave count (critical path)
 
     @property
     def eligible_fraction(self) -> float:
         return self.eligible_bytes / max(1, self.total_bytes_estimate)
 
+    @property
+    def bank_parallel_speedup(self) -> float:
+        """Activation-count / wave-count: how much of the banked access bill
+        the banks absorb in parallel (1.0 = fully serialized)."""
+        return self.banked_accesses / max(1, self.bank_waves)
 
-def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024) -> OffloadReport:
-    """Scan HLO for ADRA-eligible integer ops and project savings."""
+
+def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024,
+                spec=None) -> OffloadReport:
+    """Scan HLO for ADRA-eligible integer ops and project savings.
+
+    With an `ArraySpec` (repro.cim.array), every op's operand words are
+    placed onto the banked geometry: each logical access becomes one
+    activation per tile (`banked_accesses`) and the per-op critical path is
+    its wave count (`bank_waves`) — banks run concurrently, waves serialize.
+    """
     # lazy imports break the core<->cim module cycle
     from repro.cim.accounting import project_savings
     from repro.cim.planner import plan_matmul, plan_multiply
@@ -92,6 +107,16 @@ def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024) -> Off
     n_ops = 0
     n_multi = 0
     planner_accesses = 0
+    banked_accesses = 0
+    bank_waves = 0
+
+    def place(op_words: int, logical_accesses: int) -> None:
+        nonlocal banked_accesses, bank_waves
+        if spec is None or op_words < 1:
+            return
+        plan = spec.plan(op_words)
+        banked_accesses += logical_accesses * plan.n_tiles
+        bank_waves += logical_accesses * plan.waves
 
     for m in _OP_RE.finditer(hlo_text):
         dtype, dims, op = m.group(1), m.group(2), m.group(3)
@@ -102,6 +127,7 @@ def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024) -> Off
         words32 += nel * width / 4.0
         n_ops += 1
         hist[op] = hist.get(op, 0) + 1
+        place(nel, 1)
 
     for m in _MUL_RE.finditer(hlo_text):
         dtype, dims = m.group(1), m.group(2)
@@ -115,6 +141,7 @@ def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024) -> Off
         n_multi += 1
         planner_accesses += accesses
         hist["multiply"] = hist.get("multiply", 0) + 1
+        place(nel, accesses)
 
     for m in _DOT_RE.finditer(hlo_text):
         out_dims, lhs_dtype, lhs_dims, cdim = m.groups()
@@ -136,6 +163,7 @@ def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024) -> Off
         n_multi += 1
         planner_accesses += sched.accesses
         hist["dot"] = hist.get("dot", 0) + 1
+        place(out_nel * k_pad, sched.accesses)
 
     # crude total-traffic estimate: every shaped tensor literal in the module
     total = 0
@@ -154,4 +182,6 @@ def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024) -> Off
         op_histogram=hist,
         multi_access_ops=n_multi,
         planner_accesses=planner_accesses,
+        banked_accesses=banked_accesses,
+        bank_waves=bank_waves,
     )

@@ -11,13 +11,12 @@ device_put with the right layout).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig, ShapeSpec
+from repro.configs.base import ArchConfig
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,7 +13,6 @@ import functools
 import operator
 
 import jax
-import jax.numpy as jnp
 
 from repro.cim.engine import traffic_model_bytes as _traffic_model
 from repro.cim.fused_kernel import DEFAULT_BLOCK_W, fused_planes_op  # noqa: F401

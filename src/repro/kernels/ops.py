@@ -16,6 +16,8 @@ from typing import Optional
 import jax
 
 from repro.cim import PlanePack, execute, execute_unfused, macro, on_tpu
+from repro.cim.array import ArraySpec
+from repro.cim.dispatch import execute_tiled
 from repro.cim.planepack import mask_to_ints
 from . import ref
 from .adra_bitplane import adra_bitplane_op, baseline_bitplane_sub_then_cmp  # noqa: F401
@@ -40,22 +42,35 @@ def _resolve_backend(interpret: Optional[bool], backend: Optional[str]) -> Optio
 
 
 def adra_sub(a: jax.Array, b: jax.Array, n_bits: int = 16,
-             interpret: bool | None = None, backend: str | None = None):
+             interpret: bool | None = None, backend: str | None = None,
+             spec: ArraySpec | None = None, mesh=None):
     """Fused single-pass subtraction + comparison over integer arrays.
 
-    Returns (diff int32[...], lt int32[...], eq int32[...]).
+    Returns (diff int32[...], lt int32[...], eq int32[...]). With `spec`
+    the operands are tiled over the banked array substrate (optionally
+    shard_mapped over `mesh`); results are identical, the ledger charges
+    per-bank activations instead of one infinite-array access.
     """
     bk = _resolve_backend(interpret, backend)
-    out = execute(PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits),
-                  ("sub", "lt", "eq"), backend=bk)
+    pa, pb = PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits)
+    if spec is not None or mesh is not None:
+        out = execute_tiled(pa, pb, ("sub", "lt", "eq"), spec=spec,
+                            backend=bk, mesh=mesh)
+    else:
+        out = execute(pa, pb, ("sub", "lt", "eq"), backend=bk)
     return out["sub"].unpack(), out["lt"].unpack(), out["eq"].unpack()
 
 
 def adra_add(a: jax.Array, b: jax.Array, n_bits: int = 16,
-             interpret: bool | None = None, backend: str | None = None):
+             interpret: bool | None = None, backend: str | None = None,
+             spec: ArraySpec | None = None, mesh=None):
     bk = _resolve_backend(interpret, backend)
-    out = execute(PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits),
-                  ("add",), backend=bk)
+    pa, pb = PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits)
+    if spec is not None or mesh is not None:
+        out = execute_tiled(pa, pb, ("add",), spec=spec, backend=bk,
+                            mesh=mesh)
+    else:
+        out = execute(pa, pb, ("add",), backend=bk)
     return out["add"].unpack()
 
 
@@ -80,22 +95,28 @@ def baseline_sub_then_cmp(a: jax.Array, b: jax.Array, n_bits: int = 16,
 
 
 def cim_matmul(a: jax.Array, b: jax.Array, n_bits: int = 8,
-               interpret: bool | None = None, backend: str | None = None):
+               interpret: bool | None = None, backend: str | None = None,
+               spec: ArraySpec | None = None, mesh=None):
     """Exact intN x intN -> int32 matmul through planned CiM access schedules.
 
     a [M, K], b [K, N] with entries representable in n_bits signed. The
-    access count is (2*n_bits - 1) + ceil(log2 K) — independent of M and N.
+    LOGICAL access count is (2*n_bits - 1) + ceil(log2 K) — independent of
+    M and N; placed on a banked `spec`, each access becomes one activation
+    per operand tile and the schedule carries its placement.
     """
     return macro.matmul(a, b, n_bits=n_bits,
-                        backend=_resolve_backend(interpret, backend))
+                        backend=_resolve_backend(interpret, backend),
+                        spec=spec, mesh=mesh)
 
 
 def cim_relu(x: jax.Array, n_bits: int = 16,
-             interpret: bool | None = None, backend: str | None = None):
+             interpret: bool | None = None, backend: str | None = None,
+             spec: ArraySpec | None = None, mesh=None):
     """max(x, 0) over integer arrays: ONE access (gt predicate + peripheral
     select) regardless of width."""
     bk = _resolve_backend(interpret, backend)
-    return macro.relu(PlanePack.pack(x, n_bits), backend=bk).unpack()
+    return macro.relu(PlanePack.pack(x, n_bits), backend=bk,
+                      spec=spec, mesh=mesh).unpack()
 
 
 # ---------------------------------------------------------------------------

@@ -19,11 +19,8 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config, input_specs, shape_applicable
-from repro.configs.base import ArchConfig, ShapeSpec
 from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh
 from repro.models import build

@@ -12,7 +12,6 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
 from repro.launch.train import preset_config
 from repro.models import build
 from repro.train import adra_sample, greedy_sample, make_decode_step, make_prefill_step

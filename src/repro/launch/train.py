@@ -12,8 +12,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
-import os
 import time
 
 import jax

@@ -11,7 +11,6 @@ Caches are plain pytrees so they shard/checkpoint like params.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Tuple
 
 import jax

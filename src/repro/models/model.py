@@ -21,7 +21,6 @@ Caches mirror the same structure; every cache/state is a plain pytree.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -34,7 +33,6 @@ from . import recurrent as rec_lib
 from . import xlstm as xlstm_lib
 from .layers import (
     chunked_lm_loss,
-    cross_entropy,
     embed,
     embed_init,
     lm_head,

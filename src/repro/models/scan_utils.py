@@ -10,11 +10,9 @@ T/chunk * |state| while keeping per-step semantics bit-exact.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Tuple
 
 import jax
-import jax.numpy as jnp
 
 
 def chunked_scan(

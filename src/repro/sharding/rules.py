@@ -21,7 +21,7 @@ axes are dropped dim-by-dim — the rule set degrades gracefully on any mesh
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -5,13 +5,11 @@ and sharding-spec derivation stay structural.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
 from repro.models.model import Model
 from repro.optim import adamw
 from repro.optim import compression as gcomp

@@ -1,0 +1,354 @@
+"""The banked array substrate: tiling round-trips, the per-bank ledger, the
+compiled-schedule cache, placement-carrying schedules, and the shard_map
+multi-device path.
+
+The core property (issue: tiling must be invisible): for random shapes —
+including word counts that are NOT multiples of the bank width — tile ->
+execute -> untile equals untiled execution bit-for-bit on every CPU
+backend, and the ledger's bank-access totals equal the analytic tile count.
+"""
+import dataclasses
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cim
+from repro.cim import ArraySpec, PlanePack, dispatch, macro, planner
+from repro.cim.accounting import LEDGER, Ledger
+from repro.cim.opset import CimOpError
+
+from _hypothesis_compat import HealthCheck, given, settings, st
+
+PORTABLE = ("jnp-boolean", "pallas-interpret")
+OPS = ("sub", "lt", "eq", "xor")
+
+_PROP = dict(max_examples=20, deadline=None,
+             suppress_health_check=[HealthCheck.function_scoped_fixture])
+
+
+def _operands(n_bits, n_words, seed):
+    rng = np.random.RandomState(seed)
+    lo, hi = -(1 << (n_bits - 1)), 1 << (n_bits - 1)
+    a = rng.randint(lo, hi, n_words)
+    b = rng.randint(lo, hi, n_words)
+    return jnp.array(a, jnp.int32), jnp.array(b, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# tiling round-trip == untiled execution (the substrate's core invariant)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 12), st.integers(1, 300), st.integers(1, 5),
+       st.integers(1, 3), st.integers(0, 2**31 - 1))
+@settings(**_PROP)
+def test_tiling_round_trip_matches_untiled(n_bits, n_words, banks,
+                                           subarrays, seed):
+    a, b = _operands(n_bits, n_words, seed)
+    pa, pb = PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits)
+    spec = ArraySpec(banks=banks, subarrays=subarrays, rows=128,
+                     bitline_words=32)
+
+    for backend in PORTABLE:
+        ref = cim.execute(pa, pb, OPS, backend=backend)
+        LEDGER.reset()
+        out = dispatch.execute_tiled(pa, pb, OPS, spec=spec, backend=backend)
+
+        for op in OPS:
+            np.testing.assert_array_equal(np.array(out[op].planes),
+                                          np.array(ref[op].planes),
+                                          err_msg=op)
+            assert out[op].shape == ref[op].shape
+            assert out[op].n_bits == ref[op].n_bits
+
+        # ledger totals == analytic tile count, round-robin over banks
+        n_tiles = -(-n_words // spec.tile_words)
+        assert LEDGER.accesses == n_tiles
+        counts = LEDGER.bank_accesses
+        assert sum(counts.values()) == n_tiles
+        assert max(counts.values()) == -(-n_tiles // banks)   # balanced
+        assert set(counts) <= {(0, k) for k in range(banks)}
+
+
+def test_tiling_round_trip_analog_oracle():
+    """The device-model backend (slow): one small case, still bit-exact."""
+    a, b = _operands(4, 40, 7)
+    pa, pb = PlanePack.pack(a, 4), PlanePack.pack(b, 4)
+    spec = ArraySpec(banks=2, subarrays=1, rows=64, bitline_words=32)
+    ref = cim.execute(pa, pb, ("sub", "lt"), backend="analog-oracle")
+    out = dispatch.execute_tiled(pa, pb, ("sub", "lt"), spec=spec,
+                                 backend="analog-oracle")
+    for op in ("sub", "lt"):
+        np.testing.assert_array_equal(np.array(out[op].unpack()),
+                                      np.array(ref[op].unpack()))
+
+
+def test_multidim_operands_tile_exactly():
+    a, b = _operands(8, 2 * 13 * 5, 11)
+    a, b = a.reshape(2, 13, 5), b.reshape(2, 13, 5)
+    pa, pb = PlanePack.pack(a, 8), PlanePack.pack(b, 8)
+    spec = ArraySpec(banks=3, subarrays=1, rows=128, bitline_words=32)
+    out = dispatch.execute_tiled(pa, pb, ("add",), spec=spec,
+                                 backend="jnp-boolean")
+    np.testing.assert_array_equal(np.array(out["add"].unpack()),
+                                  np.array(a) + np.array(b))
+
+
+# ---------------------------------------------------------------------------
+# geometry validation
+# ---------------------------------------------------------------------------
+
+
+def test_array_spec_validation_errors():
+    with pytest.raises(CimOpError):
+        ArraySpec(banks=0)
+    with pytest.raises(CimOpError):
+        ArraySpec(bitline_words=31)
+    with pytest.raises(CimOpError):
+        ArraySpec(bitline_words=0)
+    with pytest.raises(CimOpError):
+        ArraySpec().plan(0)
+
+
+def test_mesh_axis_validated_at_dispatch():
+    """A mesh without the requested axis must raise CimOpError from ANY
+    mesh-taking entry point, not a raw KeyError deep in dispatch."""
+    import jax
+
+    mesh = jax.make_mesh((1,), ("batch",))
+    a, b = _operands(8, 10, 3)
+    pa, pb = PlanePack.pack(a, 8), PlanePack.pack(b, 8)
+    with pytest.raises(CimOpError, match="no 'data'"):
+        dispatch.execute_tiled(pa, pb, ("add",), backend="jnp-boolean",
+                               mesh=mesh)
+
+
+def test_rows_budget_enforced():
+    """An access whose operand + output planes exceed the subarray rows must
+    be refused — the geometry is a real constraint, not advice."""
+    spec = ArraySpec(banks=1, subarrays=1, rows=16, bitline_words=32)
+    a, b = _operands(8, 10, 3)
+    pa, pb = PlanePack.pack(a, 8), PlanePack.pack(b, 8)
+    with pytest.raises(CimOpError):           # 2*8 operand + 9 out > 16 rows
+        dispatch.execute_tiled(pa, pb, ("add",), spec=spec,
+                               backend="jnp-boolean")
+    spec_ok = ArraySpec(banks=1, subarrays=1, rows=32, bitline_words=32)
+    dispatch.execute_tiled(pa, pb, ("add",), spec=spec_ok,
+                           backend="jnp-boolean")
+
+
+# ---------------------------------------------------------------------------
+# ledger: reset really clears everything; bank report is self-consistent
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_reset_clears_every_field():
+    """reset() must clear EVERY accumulator — including the per-op breakdown
+    keys charge() populates and the per-bank fields charge_banked adds; a
+    fresh Ledger is the reference."""
+    led = Ledger()
+    spec = ArraySpec(banks=2, subarrays=1, rows=64, bitline_words=32)
+    led.charge(("sub", "lt"), 8, 100)
+    led.charge_banked(("add",), 8, 100, spec.plan(100))
+    led.charge_reduction(12.5)
+    assert led.accesses and led.per_op and led.bank_accesses
+    assert led.activated_words32 and led.inter_bank_words32
+
+    led.reset()
+    fresh = dataclasses.asdict(Ledger())
+    assert dataclasses.asdict(led) == fresh
+    # and in particular the breakdown dicts are EMPTY, not just zeroed
+    assert led.per_op == {} and led.bank_accesses == {}
+
+
+def test_disabled_ledger_charges_nothing():
+    led = Ledger(enabled=False)
+    spec = ArraySpec(banks=2, subarrays=1, rows=64, bitline_words=32)
+    led.charge(("sub",), 8, 10)
+    led.charge_banked(("add",), 8, 10, spec.plan(10))
+    led.charge_reduction(5.0)
+    assert dataclasses.asdict(led) == dataclasses.asdict(Ledger(enabled=False))
+
+
+def test_bank_report_contention_and_utilization():
+    spec = ArraySpec(banks=4, subarrays=1, rows=128, bitline_words=32)
+    a, b = _operands(8, 5 * 32, 5)           # 5 tiles on 4 banks -> 2 waves
+    pa, pb = PlanePack.pack(a, 8), PlanePack.pack(b, 8)
+    LEDGER.reset()
+    dispatch.execute_tiled(pa, pb, ("add",), spec=spec, backend="jnp-boolean")
+    rep = LEDGER.bank_report(spec)
+    assert rep["activations"] == 5
+    assert rep["waves"] == 2                  # bank 0 runs tiles 0 and 4
+    assert rep["ideal_waves"] == 2
+    assert rep["utilization"] == pytest.approx(1.0)   # 160 words fill tiles
+    assert 0 < rep["edp_decrease_pct"] < 100
+    assert rep["cim_edp"] < rep["baseline_edp"]
+
+
+# ---------------------------------------------------------------------------
+# compiled-schedule cache
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_cache_hits_and_misses():
+    a, b = _operands(8, 100, 9)
+    pa, pb = PlanePack.pack(a, 8), PlanePack.pack(b, 8)
+    spec = ArraySpec(banks=2, subarrays=1, rows=128, bitline_words=32)
+    dispatch.clear_schedule_cache()
+
+    dispatch.execute_tiled(pa, pb, ("add",), spec=spec, backend="jnp-boolean")
+    assert dispatch.cache_stats() == {"hits": 0, "misses": 1, "entries": 1}
+    dispatch.execute_tiled(pa, pb, ("add",), spec=spec, backend="jnp-boolean")
+    assert dispatch.cache_stats() == {"hits": 1, "misses": 1, "entries": 1}
+
+    # bank count is NOT part of the key (same tile shape -> same program)...
+    dispatch.execute_tiled(pa, pb, ("add",),
+                           spec=ArraySpec(banks=4, subarrays=1, rows=128,
+                                          bitline_words=32),
+                           backend="jnp-boolean")
+    assert dispatch.cache_stats()["hits"] == 2
+    # ...but ops, tile shape and backend are
+    dispatch.execute_tiled(pa, pb, ("sub",), spec=spec, backend="jnp-boolean")
+    dispatch.execute_tiled(pa, pb, ("add",),
+                           spec=ArraySpec(banks=2, subarrays=2, rows=128,
+                                          bitline_words=32),
+                           backend="jnp-boolean")
+    dispatch.execute_tiled(pa, pb, ("add",), spec=spec,
+                           backend="pallas-interpret")
+    stats = dispatch.cache_stats()
+    assert stats["misses"] == 4 and stats["entries"] == 4
+
+
+# ---------------------------------------------------------------------------
+# placement-carrying schedules + banked macros
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_carries_placement():
+    spec = ArraySpec(banks=2, subarrays=1, rows=128, bitline_words=32)
+    sched = planner.plan_multiply(6, 6)
+    assert sched.placement is None and sched.placed_accesses == sched.accesses
+    placed = sched.placed(spec, 100)
+    assert placed.placement.n_tiles == 4
+    assert placed.placed_accesses == sched.accesses * 4
+    # composition keeps the placement
+    combined = placed + planner.plan_reduce_sum(8)
+    assert combined.placement == placed.placement
+
+
+def test_banked_multiply_ledger_matches_placed_schedule():
+    spec = ArraySpec(banks=2, subarrays=1, rows=128, bitline_words=32)
+    n_bits, n = 6, 100
+    a, b = _operands(n_bits, n, 13)
+    pa, pb = PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits)
+    LEDGER.reset()
+    prod = macro.multiply(pa, pb, backend="jnp-boolean", spec=spec)
+    np.testing.assert_array_equal(np.array(prod.unpack()),
+                                  np.array(a) * np.array(b))
+    placed = planner.plan_multiply(n_bits, n_bits).placed(spec, n)
+    assert LEDGER.accesses == placed.placed_accesses
+
+
+def test_banked_matmul_charges_inter_bank_reduction():
+    spec = ArraySpec(banks=2, subarrays=1, rows=128, bitline_words=32)
+    rng = np.random.RandomState(17)
+    A = jnp.array(rng.randint(-8, 8, (4, 7)), jnp.int32)
+    B = jnp.array(rng.randint(-8, 8, (7, 3)), jnp.int32)
+    LEDGER.reset()
+    C = macro.matmul(A, B, n_bits=4, backend="jnp-boolean", spec=spec)
+    np.testing.assert_array_equal(
+        np.array(C), np.array(A, np.int64) @ np.array(B, np.int64))
+    placed = planner.plan_matmul(7, 3, n_bits=4).placed(spec, 4 * 8 * 3)
+    assert LEDGER.accesses == placed.placed_accesses
+    # the stride-N tree reduction moves words across the 32-word tiles
+    assert LEDGER.inter_bank_words32 > 0
+    rep = LEDGER.bank_report(spec)
+    assert rep["inter_bank_words32"] == LEDGER.inter_bank_words32
+
+
+def test_kernel_ops_banked_entry_points():
+    from repro.kernels import ops
+
+    a, b = _operands(8, 90, 19)
+    spec = ArraySpec(banks=3, subarrays=1, rows=128, bitline_words=32)
+    LEDGER.reset()
+    d, lt, eq = ops.adra_sub(a, b, n_bits=8, backend="jnp-boolean", spec=spec)
+    np.testing.assert_array_equal(np.array(d), np.array(a) - np.array(b))
+    np.testing.assert_array_equal(np.array(lt),
+                                  (np.array(a) < np.array(b)).astype(np.int32))
+    assert LEDGER.accesses == 3               # ceil(90 / 32) tiles
+    s = ops.adra_add(a, b, n_bits=8, backend="jnp-boolean", spec=spec)
+    np.testing.assert_array_equal(np.array(s), np.array(a) + np.array(b))
+    r = ops.cim_relu(a, n_bits=8, backend="jnp-boolean", spec=spec)
+    np.testing.assert_array_equal(np.array(r), np.maximum(np.array(a), 0))
+
+
+def test_offload_bank_aware_access_counts():
+    from repro.core.offload import analyze_hlo
+
+    hlo = ("  %r = s8[4096] add(s8[4096] %a, s8[4096] %b)\n"
+           "  %m = s8[4096] multiply(s8[4096] %a, s8[4096] %b)\n")
+    base = analyze_hlo(hlo)
+    assert base.banked_accesses == 0 and base.bank_waves == 0
+    spec = ArraySpec(banks=4, subarrays=1, rows=1024, bitline_words=1024)
+    rep = analyze_hlo(hlo, spec=spec)
+    # 4096 words -> 4 tiles -> 1 wave on 4 banks; multiply plans 15 accesses
+    assert rep.banked_accesses == (1 + 15) * 4
+    assert rep.bank_waves == (1 + 15) * 1
+    assert rep.bank_parallel_speedup == pytest.approx(4.0)
+
+
+# ---------------------------------------------------------------------------
+# shard_map: multi-device tiles, per-device ledgers
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_tiles_match_and_ledgers_sum():
+    """8 forced host devices: shard_map execution equals the single-device
+    result, and the per-device bank ledgers sum to the single-device total
+    (the substrate's conservation law)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+        import numpy as np, jax.numpy as jnp
+        from repro import cim
+        from repro.cim import PlanePack, ArraySpec, dispatch
+        from repro.launch.mesh import make_smoke_mesh
+
+        rng = np.random.RandomState(0)
+        n_bits, n = 8, 10 * 32            # 10 tiles of 32 words
+        a = jnp.array(rng.randint(-100, 100, n), jnp.int32)
+        b = jnp.array(rng.randint(-100, 100, n), jnp.int32)
+        pa, pb = PlanePack.pack(a, n_bits), PlanePack.pack(b, n_bits)
+        spec = ArraySpec(banks=2, subarrays=1, rows=64, bitline_words=32)
+        mesh = make_smoke_mesh()
+        n_dev = int(mesh.shape['data'])
+        assert n_dev > 1, mesh
+
+        cim.LEDGER.reset()
+        ref = dispatch.execute_tiled(pa, pb, ('sub', 'lt'), spec=spec,
+                                     backend='jnp-boolean')
+        single_total = cim.LEDGER.accesses
+        single_banks = dict(cim.LEDGER.bank_accesses)
+
+        cim.LEDGER.reset()
+        out = dispatch.execute_sharded(pa, pb, ('sub', 'lt'), mesh,
+                                       spec=spec, backend='jnp-boolean')
+        for op in ('sub', 'lt'):
+            np.testing.assert_array_equal(np.array(out[op].unpack()),
+                                          np.array(ref[op].unpack()))
+        per_dev = cim.LEDGER.per_device()
+        assert len(per_dev) == n_dev, per_dev
+        assert sum(per_dev.values()) == single_total, (per_dev, single_total)
+        assert sum(cim.LEDGER.bank_accesses.values()) == \\
+            sum(single_banks.values())
+        print('OK', per_dev)
+    """)
+    r = subprocess.run([sys.executable, "-W", "ignore", "-c", code],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "OK" in r.stdout

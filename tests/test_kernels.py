@@ -9,7 +9,6 @@ from repro.core.bitplane import pack_bitplanes, unpack_bitplanes
 from repro.kernels import ops, ref
 from repro.kernels.adra_bitplane import (
     adra_bitplane_op,
-    baseline_bitplane_sub_then_cmp,
     traffic_model_bytes,
 )
 

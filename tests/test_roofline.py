@@ -1,6 +1,5 @@
 """Roofline methodology: HLO collective parser, analytic models, terms."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,10 +1,8 @@
 """Fault tolerance, checkpointing, data determinism, optimizer, compression."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
