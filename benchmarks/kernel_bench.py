@@ -14,6 +14,10 @@ Sections:
     64 banks; words/access stays fixed by the geometry while the serialized
     wave count (and with it the contention-adjusted EDP) drops with bank
     count. Also asserts the compiled-schedule cache serves repeats.
+  lowering — the jaxpr->CiM compiler on a quantized MLP: region/access
+    counts of the lowered hybrid program (asserted equal to the executed
+    ledger AND to the jaxpr-sourced offload estimate) and the lowered-MLP
+    traffic ratio vs the near-memory per-access baseline.
 
 `--json [PATH]` additionally writes the metrics as BENCH_kernel.json for CI
 artifact tracking of the perf trajectory per PR; `benchmarks/
@@ -237,6 +241,67 @@ def bank_sweep_section(metrics):
     }
 
 
+def lowering_section(metrics):
+    """The lowering compiler end to end: a quantized swiglu MLP compiled to
+    the hybrid CiM/host program. Gates: the executed ledger must equal the
+    compiled plan AND the offload estimate (the estimator/executor
+    contract), and the fused-schedule traffic ratio vs re-streaming every
+    access near-memory must stay >1.5."""
+    from repro.core.offload import analyze_trace
+    from repro.models import layers
+
+    d_model, d_ff, batch, n_bits = 16, 32, 4, 8
+    key = jax.random.PRNGKey(0)
+    p = layers.mlp_init(key, d_model, d_ff, "swiglu", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, d_model),
+                          jnp.float32)
+
+    lf = layers._lowered_mlp("swiglu", n_bits, "jnp-boolean", None, None)
+    comp = lf.trace(p, x)
+    led = cim.ledger()
+    led.reset()
+    out = lf(p, x)
+    np.testing.assert_array_equal(
+        np.array(out), np.array(layers._mlp_quantized(p, x, "swiglu",
+                                                      n_bits)))
+    assert led.accesses == comp.accesses, (led.accesses, comp.accesses)
+    rep = analyze_trace(comp.trace)
+    assert rep.adra_accesses == led.accesses, (rep.adra_accesses, led.accesses)
+
+    # lowered traffic: fused region schedules (operands stream once, every
+    # intermediate stays in-array) vs the near-memory baseline re-streaming
+    # operands for each scheduled access
+    fused = baseline = 0.0
+    for region in comp.regions:
+        for op in region.ops:
+            if op.schedule is None or op.accesses == 0:
+                continue
+            t = planner.schedule_traffic_bytes(
+                op.schedule, op.n_bits, -(-op.words // 32))
+            fused += t["fused"]
+            baseline += t["baseline"]
+    ratio = baseline / fused
+    shape = f"{batch}x{d_model}x{d_ff}"
+    print(f"lowering_mlp_regions,{shape},{len(comp.regions)},"
+          f"one fused region per quantized matmul")
+    print(f"lowering_mlp_accesses,{shape},{comp.accesses},"
+          f"ledger- and offload-verified hybrid program")
+    print(f"lowering_mlp_traffic_ratio,{shape},{ratio:.3f},"
+          f"fused regions vs near-memory re-streaming, >1.5 required")
+    assert ratio > 1.5, ratio
+    metrics["lowering"] = {
+        "mlp": {
+            "shape": [batch, d_model, d_ff],
+            "regions": len(comp.regions),
+            "eligible_eqns": comp.eligible_eqns,
+            "accesses": comp.accesses,
+            "ledger_accesses": led.accesses,
+            "traffic": {"fused": fused, "baseline": baseline,
+                        "ratio": ratio},
+        },
+    }
+
+
 def main(argv=()):
     # argv defaults to () so programmatic callers (benchmarks.run) never
     # inherit the host process's CLI; __main__ passes sys.argv explicitly
@@ -250,6 +315,7 @@ def main(argv=()):
     engine_section(metrics)
     macro_section(metrics)
     bank_sweep_section(metrics)
+    lowering_section(metrics)
 
     if args.json:
         with open(args.json, "w") as f:

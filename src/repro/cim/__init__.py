@@ -23,8 +23,14 @@ any registered backend:
   array       — banked physical geometry: ArraySpec (banks x subarrays x
                 rows x bitline words) and TilePlan placement
   dispatch    — tiling dispatcher: bank-sized tiles vmapped over the fused
-                kernel, compiled-schedule cache (hit/miss counters), and a
-                shard_map path over the launch/mesh meshes
+                kernel, bounded-LRU compiled-schedule cache (hit/miss/
+                eviction counters), and a shard_map path over the
+                launch/mesh meshes
+  trace       — jaxpr -> CiM IR: eqn-level eligibility classification
+                shared by the offload estimator and the executor
+  lower       — the lowering compiler: fuse eligible eqn runs into region
+                Schedules, execute them through ChainExecutor, run the
+                rest on the host — offload estimates become execution
 
 Layering: repro.core holds the physics (device model, sensing, gate-level
 modules, calibrated energy model) and remains the semantic oracle; repro.cim
@@ -36,9 +42,11 @@ from . import (  # noqa: F401
     backends,
     dispatch,
     engine,
+    lower as lower_mod,
     macro,
     opset,
     planner,
+    trace as trace_mod,
 )
 from .accounting import LEDGER, Ledger, ledger, project_savings  # noqa: F401
 from .array import DEFAULT_SPEC, ArraySpec, TilePlan  # noqa: F401
@@ -47,6 +55,7 @@ from .dispatch import (  # noqa: F401
     clear_schedule_cache,
     execute_sharded,
     execute_tiled,
+    set_schedule_cache_capacity,
 )
 from .backends import (  # noqa: F401
     available_backends,
@@ -68,7 +77,14 @@ from .engine import (  # noqa: F401
     traffic_model_bytes,
 )
 from .fused_kernel import DEFAULT_BLOCK_W, fused_planes_op  # noqa: F401
+from .lower import (  # noqa: F401
+    LoweredComputation,
+    LoweredFunction,
+    lower,
+)
+from .trace import Trace, TracedOp, trace  # noqa: F401
 from .macro import (  # noqa: F401
+    ChainExecutor,
     ScheduleCursor,
     abs_,
     dot,
@@ -92,7 +108,10 @@ from .planepack import PlanePack, mask_to_ints  # noqa: F401
 from .planner import (  # noqa: F401
     Schedule,
     Step,
+    concat_schedules,
     plan_abs,
+    plan_elementwise,
+    plan_neg,
     plan_dot,
     plan_matmul,
     plan_maximum,

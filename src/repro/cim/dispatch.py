@@ -50,24 +50,69 @@ def _shard_map(body, mesh, in_specs, out_specs):
 
 
 # ---------------------------------------------------------------------------
-# compiled-schedule cache
+# compiled-schedule cache (bounded LRU)
 # ---------------------------------------------------------------------------
 
-_PROGRAMS: Dict[tuple, object] = {}
+import os as _os
+from collections import OrderedDict
+
+#: default capacity; override per process with set_schedule_cache_capacity()
+#: or the REPRO_CIM_CACHE_CAPACITY env var. Serving workloads with varied
+#: tile shapes would otherwise grow the program table without bound.
+_DEFAULT_CAPACITY = 256
+
+_PROGRAMS: "OrderedDict[tuple, object]" = OrderedDict()
+
+
+def _env_capacity() -> int:
+    """REPRO_CIM_CACHE_CAPACITY, validated like set_schedule_cache_capacity
+    (malformed or < 1 values fall back to the default instead of silently
+    disabling the cache or crashing the import)."""
+    raw = _os.environ.get("REPRO_CIM_CACHE_CAPACITY")
+    if raw is None:
+        return _DEFAULT_CAPACITY
+    try:
+        cap = int(raw)
+    except ValueError:
+        return _DEFAULT_CAPACITY
+    return cap if cap >= 1 else _DEFAULT_CAPACITY
+
+
+_CAPACITY = _env_capacity()
 _HITS = 0
 _MISSES = 0
+_EVICTIONS = 0
 
 
 def cache_stats() -> Dict[str, int]:
-    """Hit/miss counters of the compiled-schedule cache."""
-    return {"hits": _HITS, "misses": _MISSES, "entries": len(_PROGRAMS)}
+    """Hit/miss/eviction counters of the compiled-schedule cache."""
+    return {"hits": _HITS, "misses": _MISSES, "entries": len(_PROGRAMS),
+            "evictions": _EVICTIONS, "capacity": _CAPACITY}
 
 
 def clear_schedule_cache() -> None:
-    global _HITS, _MISSES
+    global _HITS, _MISSES, _EVICTIONS
     _PROGRAMS.clear()
     _HITS = 0
     _MISSES = 0
+    _EVICTIONS = 0
+
+
+def set_schedule_cache_capacity(capacity: int) -> None:
+    """Bound the compiled-schedule cache to `capacity` entries (>= 1);
+    least-recently-used programs are evicted once the bound is exceeded."""
+    global _CAPACITY
+    if capacity < 1:
+        raise opset.CimOpError(f"cache capacity must be >= 1, got {capacity}")
+    _CAPACITY = int(capacity)
+    _evict_to_capacity()
+
+
+def _evict_to_capacity() -> None:
+    global _EVICTIONS
+    while len(_PROGRAMS) > _CAPACITY:
+        _PROGRAMS.popitem(last=False)
+        _EVICTIONS += 1
 
 
 def _cached_program(ops: Tuple[str, ...], n_bits: int, tile_shape: tuple,
@@ -76,7 +121,10 @@ def _cached_program(ops: Tuple[str, ...], n_bits: int, tile_shape: tuple,
 
     Without the cache every call would close over a fresh lambda and retrace
     under jit; with it, a repeated (ops, n_bits, tile_shape, backend[,mesh])
-    schedule reuses the compiled executable."""
+    schedule reuses the compiled executable. The table is a bounded LRU:
+    a hit refreshes recency, an insert past capacity evicts the coldest
+    program (it recompiles on next use — correctness never depends on
+    residency)."""
     global _HITS, _MISSES
     # the mesh object itself (hashable) is the key component: two meshes of
     # identical shape over DIFFERENT devices must not share a program
@@ -85,6 +133,7 @@ def _cached_program(ops: Tuple[str, ...], n_bits: int, tile_shape: tuple,
     prog = _PROGRAMS.get(key)
     if prog is not None:
         _HITS += 1
+        _PROGRAMS.move_to_end(key)
         return prog
     _MISSES += 1
 
@@ -101,6 +150,7 @@ def _cached_program(ops: Tuple[str, ...], n_bits: int, tile_shape: tuple,
                                   in_specs=(spec3, spec3),
                                   out_specs=tuple(spec3 for _ in ops)))
     _PROGRAMS[key] = prog
+    _evict_to_capacity()
     return prog
 
 

@@ -1,0 +1,422 @@
+"""The jaxpr -> CiM lowering compiler: offload ESTIMATES become EXECUTION.
+
+`lower(fn)` turns an unmodified JAX function into a hybrid callable:
+
+  1. `repro.cim.trace` stages the function and classifies every eqn
+     (single-access / multi-access / free peripheral / host).
+  2. Maximal runs of eligible eqns become fused REGIONS. Each region's
+     per-eqn schedules are concatenated (planner.concat_schedules) into ONE
+     region Schedule, executed through one macro.ChainExecutor — so chained
+     eligible ops share a cursor and their intermediates stay in the
+     PlanePack packed domain with ZERO pack/unpack between them. The only
+     codec entries are the region's external inputs (pack) and the outputs
+     a host eqn or the caller consumes (unpack).
+  3. Everything else executes on the host, eqn by eqn, exactly as
+     `jax.core.eval_jaxpr` would.
+
+The hybrid callable is bit-exact with the original function: every CiM op
+result is truncated/extended to its eqn's output dtype in the packed domain
+(free peripheral wiring), so int8 wrap-around, unsigned arithmetic and bool
+predicates all match jnp semantics — asserted across the full eligible op
+surface by tests/test_cim_lower.py.
+
+Cost model contract: the region schedules ARE the cost. An unbanked run
+charges the ledger exactly `sum(region.schedule.accesses)` accesses — the
+same number `repro.core.offload.analyze(fn, *args)` (source="jaxpr")
+reports, because both read the same trace. With an ArraySpec, every access
+tiles over banks through repro.cim.dispatch and the ledger charges per
+(device, bank) activations instead.
+
+The one declared exception to zero-repack: a `dot_general` consumes
+MATERIALIZED integer operands (the broadcast [M, K_pad, N] layout has to be
+built, exactly as in repro.cim.macro.matmul), so a packed in-region operand
+feeding a contraction is unpacked first. Elementwise chains never repack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import macro, planner
+from . import trace as trace_mod
+from .array import ArraySpec
+from .opset import CimOpError
+from .planepack import PlanePack
+from .trace import CMP_PRIMS, ConstVal, TracedOp, aval_of, dtype_bits, dtype_signed
+
+_FULL32 = np.uint32(0xFFFFFFFF)
+
+
+# ---------------------------------------------------------------------------
+# packed-domain helpers (all zero-access peripheral wiring)
+# ---------------------------------------------------------------------------
+
+_PAD_MASKS: Dict[Tuple[int, int], np.ndarray] = {}
+
+
+def _pad_mask(n_words: int, lanes: int) -> np.ndarray:
+    m = _PAD_MASKS.get((n_words, lanes))
+    if m is None:
+        m = np.zeros(lanes, np.uint32)
+        full, rem = divmod(n_words, 32)
+        m[:full] = _FULL32
+        if rem:
+            m[full] = (np.uint32(1) << np.uint32(rem)) - np.uint32(1)
+        _PAD_MASKS[(n_words, lanes)] = m
+    return m
+
+
+def _mask_pad(pack: PlanePack) -> PlanePack:
+    """Zero the bit positions past the last logical word. Every region
+    result is masked so packs feeding shifts/reductions keep the zero-pad
+    invariant (an `eq` bitmap, say, reads 1 on pad words)."""
+    lanes = pack.planes.shape[1]
+    if pack.n_words >= lanes * 32:
+        return pack
+    mask = jnp.asarray(_pad_mask(pack.n_words, lanes))
+    return dataclasses.replace(pack, planes=pack.planes & mask[None, :])
+
+
+def _to_width(pack: PlanePack, bits: int, signed: bool) -> PlanePack:
+    if pack.n_bits > bits:
+        pack = pack.truncate_to(bits)
+    elif pack.n_bits < bits:
+        pack = pack.extend_to(bits)      # fill follows the pack's signedness
+    return pack.as_signed(signed)
+
+
+def _finish(pack: PlanePack, aval) -> PlanePack:
+    """Land an eqn result on its output aval: width/signedness per dtype
+    (two's-complement wrap, exactly jnp's cast semantics), logical shape,
+    pad bits cleared."""
+    pack = _to_width(pack, dtype_bits(aval.dtype), dtype_signed(aval.dtype))
+    pack = dataclasses.replace(pack, shape=tuple(aval.shape))
+    return _mask_pad(pack)
+
+
+def _complement(pack: PlanePack) -> PlanePack:
+    """Bitwise NOT of every plane — the SA output complement, free wiring."""
+    return dataclasses.replace(pack,
+                               planes=pack.planes ^ jnp.uint32(0xFFFFFFFF))
+
+
+def _broadcast_pack(pack: PlanePack, shape: Tuple[int, ...]) -> PlanePack:
+    """Scalar pack -> `shape`: the row buffer fanning one word out."""
+    if pack.n_words != 1:
+        raise CimOpError(f"can only broadcast scalar packs, got {pack.shape}")
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return pack.take_words(np.zeros(n, np.int64), tuple(shape))
+
+
+# ---------------------------------------------------------------------------
+# regions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Region:
+    """A maximal run of eligible eqns fused into one Schedule."""
+
+    name: str
+    ops: List[TracedOp]
+    schedule: planner.Schedule
+    unpack_vars: Tuple[Any, ...] = ()   # outvars a host consumer needs
+
+    @property
+    def accesses(self) -> int:
+        return self.schedule.accesses
+
+
+def _read_host(env: Dict[Any, Any], atom):
+    if isinstance(atom, jax.core.Literal):
+        return jnp.asarray(atom.val, dtype=atom.aval.dtype)
+    if isinstance(atom, ConstVal):
+        return atom.val
+    return env[atom]
+
+
+class LoweredComputation:
+    """One staged-and-planned lowering of a function at fixed avals.
+
+    `execute(*args)` runs the hybrid program; `describe()` prints the
+    region structure and fused schedules; `accesses` is the exact unbanked
+    ledger charge of one execution.
+    """
+
+    def __init__(self, tr: trace_mod.Trace,
+                 backend: Optional[str] = None,
+                 spec: Optional[ArraySpec] = None, mesh=None):
+        self.trace = tr
+        self.backend = backend
+        self.spec = spec
+        self.mesh = mesh
+        self.items: List[Tuple[str, Any]] = []
+        self.regions: List[Region] = []
+        self._build()
+
+    # -- structure ----------------------------------------------------------
+    def _build(self) -> None:
+        items: List[Tuple[str, Any]] = []
+        buf: List[TracedOp] = []
+
+        def flush():
+            if not buf:
+                return
+            scheds = [o.schedule for o in buf if o.schedule is not None]
+            if not scheds or sum(s.accesses for s in scheds) == 0:
+                # a run of purely-free eqns does no array work: host it
+                items.extend(("host", o) for o in buf)
+            else:
+                region = Region(name=f"region{len(self.regions)}",
+                                ops=list(buf),
+                                schedule=planner.concat_schedules(
+                                    scheds, macro=f"region{len(self.regions)}"))
+                self.regions.append(region)
+                items.append(("region", region))
+            buf.clear()
+
+        for op in self.trace.ops:
+            if op.eligible:
+                buf.append(op)
+            else:
+                flush()
+                items.append(("host", op))
+        flush()
+        self.items = items
+
+        # which region outputs must materialize for host consumers / outputs
+        out_roots = {v for v in self.trace.closed.jaxpr.outvars
+                     if isinstance(v, jax.core.Var)}
+        consumed_after: List[set] = [set() for _ in items]
+        acc: set = set(out_roots)
+        for i in range(len(items) - 1, -1, -1):
+            consumed_after[i] = set(acc)
+            kind, payload = items[i]
+            ops = payload.ops if kind == "region" else [payload]
+            for op in ops:
+                acc.update(v for v in op.invars
+                           if isinstance(v, jax.core.Var))
+        for i, (kind, payload) in enumerate(items):
+            if kind == "region":
+                payload.unpack_vars = tuple(
+                    v for op in payload.ops for v in op.outvars
+                    if v in consumed_after[i])
+
+    # -- execution ----------------------------------------------------------
+    def execute(self, *args):
+        leaves = jax.tree_util.tree_leaves(args)
+        invars = self.trace.closed.jaxpr.invars
+        if len(leaves) != len(invars):
+            raise CimOpError(
+                f"lowered function takes {len(invars)} array leaves, "
+                f"got {len(leaves)}")
+        env: Dict[Any, Any] = dict(zip(invars, leaves))
+        # a closed-over constant can BE an output (or leak past the invar
+        # substitution); seed the env so those reads resolve
+        env.update(zip(self.trace.closed.jaxpr.constvars,
+                       self.trace.closed.consts))
+        for kind, payload in self.items:
+            if kind == "host":
+                self._run_host(payload, env)
+            else:
+                self._run_region(payload, env)
+        outs = [_read_host(env, v) for v in self.trace.closed.jaxpr.outvars]
+        out_tree = jax.tree_util.tree_structure(self.trace.out_shape)
+        return jax.tree_util.tree_unflatten(out_tree, outs)
+
+    __call__ = execute
+
+    def _run_host(self, op: TracedOp, env: Dict[Any, Any]) -> None:
+        if op.name == "_alias":
+            env[op.outvars[0]] = _read_host(env, op.invars[0])
+            return
+        subfuns, bind_params = op.prim.get_bind_params(op.params)
+        in_vals = [_read_host(env, v) for v in op.invars]
+        vals = op.prim.bind(*subfuns, *in_vals, **bind_params)
+        if not op.prim.multiple_results:
+            vals = [vals]
+        for var, val in zip(op.outvars, vals):
+            if not isinstance(var, jax.core.DropVar):
+                env[var] = val
+
+    def _run_region(self, region: Region, env: Dict[Any, Any]) -> None:
+        chain = macro.ChainExecutor(region.schedule, backend=self.backend,
+                                    spec=self.spec, mesh=self.mesh)
+        penv: Dict[Any, PlanePack] = {}
+
+        def getp(atom, shape) -> PlanePack:
+            """Operand as a PlanePack of logical `shape` (region entry pack
+            for host values — each external var packed ONCE per region —
+            with scalar fanout staying in the packed domain)."""
+            if isinstance(atom, jax.core.Var) and atom in penv:
+                p = penv[atom]
+                if p.shape != tuple(shape):
+                    p = _broadcast_pack(p, tuple(shape))
+                return p
+            aval = aval_of(atom)
+            arr = jnp.asarray(_read_host(env, atom))
+            if arr.dtype == jnp.bool_:
+                arr = arr.astype(jnp.int32)
+            if tuple(arr.shape) != tuple(shape):
+                arr = jnp.broadcast_to(arr, tuple(shape))
+            p = PlanePack.pack(arr, dtype_bits(aval.dtype),
+                               signed=dtype_signed(aval.dtype))
+            if isinstance(atom, jax.core.Var) and \
+                    tuple(shape) == tuple(aval.shape):
+                penv[atom] = p        # entry pack: reused by later consumers
+            return p
+
+        def geti(atom) -> jax.Array:
+            """Operand as an integer array (the dot_general layout rebuild —
+            the one place a packed in-region value materializes)."""
+            if isinstance(atom, jax.core.Var) and atom in penv:
+                aval = aval_of(atom)
+                return penv[atom].unpack().astype(aval.dtype)
+            return jnp.asarray(_read_host(env, atom))
+
+        for op in region.ops:
+            out_aval = aval_of(op.outvars[0])
+            shape = tuple(out_aval.shape)
+            name = op.name
+            if name in ("add", "sub", "and", "or", "xor"):
+                pa, pb = getp(op.invars[0], shape), getp(op.invars[1], shape)
+                res = chain.execute(pa, pb, (name,))[name]
+            elif name in CMP_PRIMS:
+                base, complement = CMP_PRIMS[name]
+                pa, pb = getp(op.invars[0], shape), getp(op.invars[1], shape)
+                res = chain.execute(pa, pb, (base,))[base]
+                if complement:
+                    res = _complement(res)
+            elif name == "min":
+                res = chain.minimum(getp(op.invars[0], shape),
+                                    getp(op.invars[1], shape))
+            elif name == "max":
+                res = chain.maximum(getp(op.invars[0], shape),
+                                    getp(op.invars[1], shape))
+            elif name == "neg":
+                res = chain.neg(getp(op.invars[0], shape))
+            elif name == "abs":
+                res = chain.abs_(getp(op.invars[0], shape))
+            elif name == "mul":
+                res = chain.multiply(getp(op.invars[0], shape),
+                                     getp(op.invars[1], shape))
+            elif name == "population_count":
+                res = chain.popcount(getp(op.invars[0], shape))
+            elif name == "reduce_sum":
+                src_shape = tuple(aval_of(op.invars[0]).shape)
+                res = chain.reduce_sum(getp(op.invars[0], src_shape))
+            elif name == "dot_general":
+                res = chain.matmul(geti(op.invars[0]), geti(op.invars[1]),
+                                   op.n_bits,
+                                   signed=dtype_signed(
+                                       aval_of(op.invars[0]).dtype))
+            elif name == "convert_element_type":
+                src_shape = tuple(aval_of(op.invars[0]).shape)
+                res = getp(op.invars[0], src_shape)
+            elif name == "reshape":
+                src_shape = tuple(aval_of(op.invars[0]).shape)
+                res = getp(op.invars[0], src_shape)
+            elif name == "not":
+                res = _complement(getp(op.invars[0], shape))
+            elif name == "select_n":
+                pred = getp(op.invars[0], shape)
+                x = getp(op.invars[1], shape)
+                y = getp(op.invars[2], shape)
+                res = macro.select(pred, y, x)   # pred ? cases[1] : cases[0]
+            elif name == "broadcast_in_dim":
+                src_shape = tuple(aval_of(op.invars[0]).shape)
+                res = _broadcast_pack(getp(op.invars[0], src_shape), shape)
+            else:                                 # pragma: no cover
+                raise CimOpError(f"region executor missing op {name!r}")
+            if not isinstance(op.outvars[0], jax.core.DropVar):
+                penv[op.outvars[0]] = _finish(res, out_aval)
+        chain.finish()
+
+        for var in region.unpack_vars:
+            aval = aval_of(var)
+            env[var] = penv[var].unpack().astype(aval.dtype)
+
+    # -- reporting ----------------------------------------------------------
+    @property
+    def accesses(self) -> int:
+        """Planned (== executed, unbanked) ADRA accesses per call."""
+        return sum(r.accesses for r in self.regions)
+
+    @property
+    def eligible_eqns(self) -> int:
+        return sum(len(r.ops) for r in self.regions)
+
+    @property
+    def host_eqns(self) -> int:
+        return sum(1 for kind, _ in self.items if kind == "host")
+
+    def describe(self) -> str:
+        lines = [f"lowered: {len(self.regions)} CiM region(s), "
+                 f"{self.host_eqns} host eqn(s), "
+                 f"{self.accesses} planned accesses"]
+        for r in self.regions:
+            segs = ", ".join(f"{name}:{n}" for name, n in
+                             (r.schedule.segments or ()))
+            lines.append(f"  {r.name}: {len(r.ops)} eqns fused -> "
+                         f"{r.accesses} accesses [{segs}]")
+        return "\n".join(lines)
+
+
+#: per-function bound on cached signature traces — a long-lived server fed
+#: ever-varying shapes must not grow a LoweredFunction without limit (the
+#: same growth class the dispatch schedule cache bounds one layer down)
+SIGNATURE_CACHE_CAPACITY = 128
+
+
+class LoweredFunction:
+    """`lower(fn)`: traces lazily per argument signature (like jit) and
+    executes the hybrid CiM/host program. The signature cache is a bounded
+    LRU (SIGNATURE_CACHE_CAPACITY); an evicted signature simply retraces."""
+
+    def __init__(self, fn, backend: Optional[str] = None,
+                 spec: Optional[ArraySpec] = None, mesh=None):
+        self.fn = fn
+        self.backend = backend
+        self.spec = spec
+        self.mesh = mesh
+        self._cache: "OrderedDict[Any, LoweredComputation]" = OrderedDict()
+
+    def trace(self, *args) -> LoweredComputation:
+        leaves, treedef = jax.tree_util.tree_flatten(args)
+        key = (treedef, tuple(
+            (jnp.shape(x), str(jnp.result_type(x))) for x in leaves))
+        comp = self._cache.get(key)
+        if comp is None:
+            comp = LoweredComputation(
+                trace_mod.trace(self.fn, *args), backend=self.backend,
+                spec=self.spec, mesh=self.mesh)
+            self._cache[key] = comp
+            while len(self._cache) > SIGNATURE_CACHE_CAPACITY:
+                self._cache.popitem(last=False)
+        else:
+            self._cache.move_to_end(key)
+        return comp
+
+    def __call__(self, *args):
+        return self.trace(*args).execute(*args)
+
+
+def lower(fn, backend: Optional[str] = None,
+          spec: Optional[ArraySpec] = None, mesh=None) -> LoweredFunction:
+    """Compile `fn` into a hybrid CiM/host callable (see module docstring).
+
+    backend : CiM backend name for the fused regions (registry default
+              when None).
+    spec    : optional banked ArraySpec — region accesses tile over banks
+              through the dispatch layer and the ledger charges per
+              (device, bank) activations.
+    mesh    : optional device mesh forwarded to the tiling dispatcher.
+    """
+    return LoweredFunction(fn, backend=backend, spec=spec, mesh=mesh)

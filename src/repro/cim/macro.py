@@ -182,16 +182,39 @@ def multiply(a: PlanePack, b: PlanePack,
 # ---------------------------------------------------------------------------
 
 
+def _abs_with(cur: ScheduleCursor, a: PlanePack) -> PlanePack:
+    zero = PlanePack.zeros_like(a)
+    out = cur.execute(zero, a, ("sub", "lt"))
+    return select(out["lt"], a, out["sub"])
+
+
+def _relu_with(cur: ScheduleCursor, a: PlanePack) -> PlanePack:
+    zero = PlanePack.zeros_like(a)
+    out = cur.execute(a, zero, ("gt",))
+    return select(out["gt"], a, zero)
+
+
+def _minimum_with(cur: ScheduleCursor, a: PlanePack,
+                  b: PlanePack) -> PlanePack:
+    out = cur.execute(a, b, ("lt",))
+    return select(out["lt"], a, b)
+
+
+def _maximum_with(cur: ScheduleCursor, a: PlanePack,
+                  b: PlanePack) -> PlanePack:
+    out = cur.execute(a, b, ("gt",))
+    return select(out["gt"], a, b)
+
+
 def abs_(a: PlanePack, backend: Optional[str] = None,
          spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
     """|a| in one access: (0 - a, 0 < a) together, then select a vs -a.
     Result is (n+1)-plane so abs(INT_MIN) is exact."""
     cur = _cursor(planner.plan_abs(a.n_bits), a.n_words, backend, spec,
                   mesh)
-    zero = PlanePack.zeros_like(a)
-    out = cur.execute(zero, a, ("sub", "lt"))
+    out = _abs_with(cur, a)
     cur.finish()
-    return select(out["lt"], a, out["sub"])
+    return out
 
 
 def relu(a: PlanePack, backend: Optional[str] = None,
@@ -199,10 +222,9 @@ def relu(a: PlanePack, backend: Optional[str] = None,
     """max(a, 0) in one access: the a > 0 predicate gates the writeback."""
     cur = _cursor(planner.plan_relu(a.n_bits), a.n_words, backend, spec,
                   mesh)
-    zero = PlanePack.zeros_like(a)
-    out = cur.execute(a, zero, ("gt",))
+    out = _relu_with(cur, a)
     cur.finish()
-    return select(out["gt"], a, zero)
+    return out
 
 
 def minimum(a: PlanePack, b: PlanePack,
@@ -210,9 +232,9 @@ def minimum(a: PlanePack, b: PlanePack,
             spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
     cur = _cursor(planner.plan_minimum(max(a.n_bits, b.n_bits)),
                   a.n_words, backend, spec, mesh)
-    out = cur.execute(a, b, ("lt",))
+    out = _minimum_with(cur, a, b)
     cur.finish()
-    return select(out["lt"], a, b)
+    return out
 
 
 def maximum(a: PlanePack, b: PlanePack,
@@ -220,9 +242,9 @@ def maximum(a: PlanePack, b: PlanePack,
             spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
     cur = _cursor(planner.plan_maximum(max(a.n_bits, b.n_bits)),
                   a.n_words, backend, spec, mesh)
-    out = cur.execute(a, b, ("gt",))
+    out = _maximum_with(cur, a, b)
     cur.finish()
-    return select(out["gt"], a, b)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -230,12 +252,7 @@ def maximum(a: PlanePack, b: PlanePack,
 # ---------------------------------------------------------------------------
 
 
-def popcount(a: PlanePack, backend: Optional[str] = None,
-             spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
-    """Set bits of each word's n-bit two's-complement pattern: pairwise
-    plane tree, n - 1 add accesses."""
-    cur = _cursor(planner.plan_popcount(a.n_bits), a.n_words, backend,
-                  spec, mesh)
+def _popcount_with(cur: ScheduleCursor, a: PlanePack) -> PlanePack:
     level = [PlanePack(planes=a.planes[i:i + 1], n_bits=1, signed=False,
                        shape=a.shape)
              for i in range(a.n_bits)]
@@ -245,14 +262,30 @@ def popcount(a: PlanePack, backend: Optional[str] = None,
         if len(level) % 2:
             nxt.append(level[-1])
         level = nxt
-    cur.finish()
     return level[0]
 
 
-def _reduce_with(cur: ScheduleCursor, acc: PlanePack) -> PlanePack:
+def popcount(a: PlanePack, backend: Optional[str] = None,
+             spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
+    """Set bits of each word's n-bit two's-complement pattern: pairwise
+    plane tree, n - 1 add accesses."""
+    cur = _cursor(planner.plan_popcount(a.n_bits), a.n_words, backend,
+                  spec, mesh)
+    out = _popcount_with(cur, a)
+    cur.finish()
+    return out
+
+
+def _reduce_with(cur: ScheduleCursor, acc: PlanePack,
+                 n_steps: Optional[int] = None) -> PlanePack:
     """Log-stride reduction: each planned step shifts the row buffer by its
     stride and adds, so element 0 of each segment accumulates the segment
     sum; exactness relies on the pack's zero padding past the last word.
+
+    `n_steps` bounds the walk to the next n_steps planned steps — required
+    when the cursor belongs to a fused region schedule that continues past
+    this reduction; None consumes everything remaining (the standalone
+    reduce/matmul cursors, whose plans end with the reduction).
 
     On a banked cursor the shift moves words BETWEEN tiles whenever the
     stride reaches across a tile boundary — that movement is the inter-bank
@@ -260,7 +293,10 @@ def _reduce_with(cur: ScheduleCursor, acc: PlanePack) -> PlanePack:
     with stride/tile_words, capped at all of them)."""
     if not acc.signed:
         acc = acc.extend_to(acc.n_bits + 1).as_signed(True)
-    for step in cur.remaining():
+    steps = cur.remaining()
+    if n_steps is not None:
+        steps = steps[:n_steps]
+    for step in steps:
         if cur.spec is not None and step.stride:
             plan = cur.spec.plan(acc.n_words)
             if plan.n_tiles > 1:
@@ -289,6 +325,34 @@ def reduce_sum(a: PlanePack, backend: Optional[str] = None,
 # ---------------------------------------------------------------------------
 
 
+def _matmul_with(cur: ScheduleCursor, a: jax.Array, b: jax.Array,
+                 n_bits: int, signed: bool = True) -> PlanePack:
+    """The matmul dataflow over an open cursor: broadcast [M, K_pad, N]
+    operand layout, ONE shift-and-add multiply, log2(K_pad) stride-N tree
+    reduction, result gathered to an [M, N] pack. Shared by the standalone
+    `matmul` wrapper and the lowering compiler's fused-region executor
+    (which passes a region cursor mid-schedule)."""
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise CimOpError(f"matmul needs [M,K] x [K,N], got {a.shape} {b.shape}")
+    m, k = a.shape
+    n = b.shape[1]
+    k_pad = 1 << planner._log2_ceil(k)
+    a_exp = jnp.zeros((m, k_pad, n), jnp.int32).at[:, :k, :].set(
+        jnp.broadcast_to(a[:, :, None], (m, k, n)).astype(jnp.int32))
+    b_exp = jnp.zeros((m, k_pad, n), jnp.int32).at[:, :k, :].set(
+        jnp.broadcast_to(b[None, :, :], (m, k, n)).astype(jnp.int32))
+
+    prod = _multiply_with(cur, PlanePack.pack(a_exp, n_bits, signed=signed),
+                          PlanePack.pack(b_exp, n_bits, signed=signed))
+    acc = _reduce_with(cur, prod, n_steps=planner._log2_ceil(k_pad))
+
+    # k = 0 slice of each row: flat(m, 0, n) = m * K_pad * N + n
+    idx = (np.arange(m)[:, None] * (k_pad * n) + np.arange(n)[None, :])
+    return acc.take_words(idx.reshape(-1), (m, n))
+
+
 def matmul(a: jax.Array, b: jax.Array, n_bits: int = 8,
            backend: Optional[str] = None,
            spec: Optional[ArraySpec] = None, mesh=None) -> jax.Array:
@@ -308,21 +372,72 @@ def matmul(a: jax.Array, b: jax.Array, n_bits: int = 8,
     m, k = a.shape
     n = b.shape[1]
     k_pad = 1 << planner._log2_ceil(k)
-    a_exp = jnp.zeros((m, k_pad, n), jnp.int32).at[:, :k, :].set(
-        jnp.broadcast_to(a[:, :, None], (m, k, n)).astype(jnp.int32))
-    b_exp = jnp.zeros((m, k_pad, n), jnp.int32).at[:, :k, :].set(
-        jnp.broadcast_to(b[None, :, :], (m, k, n)).astype(jnp.int32))
-
     sched = planner.plan_matmul(k, n, n_bits=n_bits, signed=True)
     cur = _cursor(sched, m * k_pad * n, backend, spec, mesh)
-    prod = _multiply_with(cur, PlanePack.pack(a_exp, n_bits),
-                          PlanePack.pack(b_exp, n_bits))
-    acc = _reduce_with(cur, prod)
+    out = _matmul_with(cur, a, b, n_bits)
     cur.finish()
+    return out.unpack()
 
-    # k = 0 slice of each row: flat(m, 0, n) = m * K_pad * N + n
-    idx = (np.arange(m)[:, None] * (k_pad * n) + np.arange(n)[None, :])
-    return acc.take_words(idx.reshape(-1), (m, n)).unpack()
+
+# ---------------------------------------------------------------------------
+# chain executor: one cursor for a fused multi-eqn region
+# ---------------------------------------------------------------------------
+
+
+class ChainExecutor:
+    """Executes a fused region Schedule (planner.concat_schedules) through
+    ONE shared cursor: each constituent op issues its planned accesses in
+    order against the same cursor, so a whole multi-eqn region inherits the
+    per-macro accounting guarantee — ledger accesses == region plan length,
+    with every intermediate staying in the PlanePack packed domain.
+
+    This is the execution half of the lowering compiler's region fusion
+    (repro.cim.lower): lower() concatenates per-eqn schedules at trace
+    time; the hybrid callable opens a ChainExecutor per region at run time.
+    """
+
+    def __init__(self, schedule: planner.Schedule,
+                 backend: Optional[str] = None,
+                 spec: Optional[ArraySpec] = None, mesh=None):
+        self.cursor = ScheduleCursor(schedule, backend, spec=spec, mesh=mesh)
+
+    # -- single-access ops (one planned step each) --------------------------
+    def execute(self, a: PlanePack, b: PlanePack,
+                ops: Sequence[str]) -> engine.Outputs:
+        return self.cursor.execute(a, b, ops)
+
+    def minimum(self, a: PlanePack, b: PlanePack) -> PlanePack:
+        return _minimum_with(self.cursor, a, b)
+
+    def maximum(self, a: PlanePack, b: PlanePack) -> PlanePack:
+        return _maximum_with(self.cursor, a, b)
+
+    def abs_(self, a: PlanePack) -> PlanePack:
+        return _abs_with(self.cursor, a)
+
+    def neg(self, a: PlanePack) -> PlanePack:
+        zero = PlanePack.zeros_like(a)
+        return self.cursor.execute(zero, a, ("sub",))["sub"]
+
+    # -- multi-access macros (their planned segment of the region) ----------
+    def multiply(self, a: PlanePack, b: PlanePack) -> PlanePack:
+        return _multiply_with(self.cursor, a, b)
+
+    def popcount(self, a: PlanePack) -> PlanePack:
+        return _popcount_with(self.cursor, a)
+
+    def reduce_sum(self, a: PlanePack) -> PlanePack:
+        acc = _reduce_with(self.cursor, a,
+                           n_steps=planner._log2_ceil(max(1, a.n_words)))
+        return PlanePack(planes=acc.planes, n_bits=acc.n_bits,
+                         signed=acc.signed, shape=())
+
+    def matmul(self, a: jax.Array, b: jax.Array, n_bits: int,
+               signed: bool = True) -> PlanePack:
+        return _matmul_with(self.cursor, a, b, n_bits, signed=signed)
+
+    def finish(self) -> None:
+        self.cursor.finish()
 
 
 def dot(a: jax.Array, b: jax.Array, n_bits: int = 8,

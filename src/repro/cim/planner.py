@@ -22,7 +22,7 @@ through the array.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 from . import opset
 from .array import ArraySpec, TilePlan
@@ -49,18 +49,23 @@ class Step:
 
 @dataclasses.dataclass(frozen=True)
 class Schedule:
-    """An ordered access plan for one macro op.
+    """An ordered access plan for one macro op (or a fused region of ops).
 
     `placement` (set by `placed()`) pins the schedule to a banked array
     geometry: every step then executes as `placement.n_tiles` bank
     activations through the tiling dispatcher, and `placed_accesses` is the
     physical activation count the ledger will show.
+
+    `segments` (set by `concat_schedules`) records the per-op boundaries of
+    a fused region plan: an ordered tuple of (macro name, step count) pairs
+    summing to len(steps) — the lowering compiler's provenance trail.
     """
 
     macro: str
     steps: Tuple[Step, ...]
     out_bits: int                 # width of the macro's result planes
     placement: Optional[TilePlan] = None
+    segments: Optional[Tuple[Tuple[str, int], ...]] = None
 
     @property
     def accesses(self) -> int:
@@ -120,6 +125,22 @@ def plan_multiply(n_bits_a: int, n_bits_b: int,
             steps.append(Step(("sub" if last_signed else "add",),
                               role="acc", shift=i))
     return Schedule("multiply", tuple(steps), out_bits=n_bits_a + n_bits_b)
+
+
+def plan_elementwise(ops: Tuple[str, ...], out_bits: int,
+                     macro: Optional[str] = None) -> Schedule:
+    """One single-access elementwise step: the engine computes every op in
+    `ops` from the same dual-row activation (add/sub/compare/any Boolean
+    function). This is the plan the lowering compiler emits for each
+    ADRA-eligible single-access jaxpr eqn."""
+    ops = opset.validate_ops(tuple(ops))
+    return Schedule(macro or "+".join(ops), (Step(ops, role="ew"),),
+                    out_bits=out_bits)
+
+
+def plan_neg(n_bits: int) -> Schedule:
+    """0 - a: one sub access against the array's zero row."""
+    return Schedule("neg", (Step(("sub",), role="neg"),), out_bits=n_bits + 1)
 
 
 def plan_abs(n_bits: int) -> Schedule:
@@ -187,8 +208,37 @@ def plan_dot(k: int, n_bits: int = 8, signed: bool = True) -> Schedule:
     return dataclasses.replace(sched, macro="dot")
 
 
+# ---------------------------------------------------------------------------
+# cross-op schedule concatenation (region fusion)
+# ---------------------------------------------------------------------------
+
+
+def concat_schedules(schedules: Sequence[Schedule],
+                     macro: str = "region") -> Schedule:
+    """Fuse an ordered run of schedules into ONE region plan.
+
+    The fused schedule is the step-wise concatenation: executing it through
+    a single ScheduleCursor runs every constituent op back to back on the
+    same PlanePack operands with no intermediate repacks — the plan-level
+    form of the lowering compiler's region fusion. `segments` keeps the
+    per-op boundaries so reports can attribute accesses back to eqns.
+    """
+    schedules = list(schedules)
+    if not schedules:
+        raise opset.CimOpError("cannot concatenate zero schedules")
+    steps: Tuple[Step, ...] = ()
+    segments = []
+    for s in schedules:
+        steps = steps + s.steps
+        segments.append((s.macro, len(s.steps)))
+    return Schedule(macro=macro, steps=steps,
+                    out_bits=max(s.out_bits for s in schedules),
+                    segments=tuple(segments))
+
+
 PLANS = {
     "multiply": plan_multiply,
+    "neg": plan_neg,
     "abs": plan_abs,
     "relu": plan_relu,
     "minimum": plan_minimum,

@@ -74,6 +74,9 @@ class ArchConfig:
     tensor_parallel: bool = True    # False: replicate params across "model"
                                     # (125M-scale: TP all-reduces cost more
                                     # than the replicated weights save)
+    cim_mlp_bits: int = 0           # >0: dense MLPs run through the
+    #                                 jaxpr->CiM lowering pass at this
+    #                                 quantization width (serve --cim-lower)
 
     # -- derived -----------------------------------------------------------
     @property

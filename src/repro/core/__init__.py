@@ -33,5 +33,5 @@ from .energy import (  # noqa: F401
     voltage_scheme2,
 )
 from .fefet import BiasConditions, FeFETParams, FEParams  # noqa: F401
-from .offload import OffloadReport, analyze_hlo  # noqa: F401
+from .offload import OffloadReport, analyze, analyze_hlo, analyze_trace  # noqa: F401
 from .sensing import SenseReferences, current_sense_margins, voltage_sense_margins  # noqa: F401

@@ -1,19 +1,34 @@
-"""ADRA offload estimator: project CiM savings for a compiled XLA program.
+"""ADRA offload estimator: project CiM savings for a JAX/XLA program.
 
-Scans HLO text for ADRA-eligible ops and projects the energy-delay saving
-were those ops served by ADRA CiM arrays instead of read+compute passes,
-using the calibrated model in repro.core.energy. Two tiers:
+Two sources, one report:
+
+  source="jaxpr" (default, via `analyze`) — stage the function with
+    `repro.cim.trace` and walk the SAME classified eqn list the lowering
+    compiler (repro.cim.lower) executes. Estimator and executor share one
+    eligibility classification, so they can never disagree: the report's
+    `adra_accesses` equals the ledger access count of one lowered
+    (unbanked) execution, and `banked_accesses` equals the placed count on
+    the given ArraySpec.
+
+  source="hlo" (fallback, via `analyze_hlo`) — regex-scan compiled HLO
+    text. Kept for post-XLA programs where no jaxpr is available (fusion
+    dumps, serialized computations); it is a projection only and is not
+    guaranteed to agree with an executed lowering.
+
+Two eligibility tiers in both sources:
 
   single-access — elementwise integer add / subtract / compare / bitwise /
     min / max: one ADRA access each (the paper's primitive set).
-  multi-access  — integer `multiply` and `dot`: lowered by the macro-op
-    planner (repro.cim.planner) to shift-and-add / tree-reduction access
-    schedules; the estimator charges the PLANNED access count per op, so
-    the projection stays faithful to the access-count cost model rather
-    than pretending multiplication is free.
+  multi-access  — integer multiply / dot / (jaxpr only) full reduce_sum and
+    population_count: lowered by the macro-op planner (repro.cim.planner)
+    to shift-and-add / tree-reduction access schedules; the estimator
+    charges the PLANNED access count per op, so the projection stays
+    faithful to the access-count cost model rather than pretending
+    multiplication is free.
 
-This ties the paper's array-level numbers to LM-scale workloads (and
-quantifies, honestly, how big that slice of a transformer step actually is).
+Byte accounting is done in BITS and rounded up once at the end, so 4-bit
+dtypes (s4/u4) contribute exact sub-byte traffic instead of fractional
+"bytes" leaking into the totals.
 """
 from __future__ import annotations
 
@@ -48,10 +63,10 @@ _DOT_RE = re.compile(
     re.M,
 )
 
-_BYTES = {"s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-          "s32": 4, "u32": 4, "pred": 1}
+#: element widths in BITS (accumulate in bits, round to bytes ONCE) — preds
+#: are stored as one byte per element in HLO buffers
 _BITS = {"s4": 4, "u4": 4, "s8": 8, "u8": 8, "s16": 16, "u16": 16,
-         "s32": 32, "u32": 32}
+         "s32": 32, "u32": 32, "pred": 8}
 
 
 def _numel(dims: str) -> int:
@@ -63,6 +78,10 @@ def _numel(dims: str) -> int:
     return n
 
 
+def _bits_to_bytes(bits: int) -> int:
+    return -(-int(bits) // 8)
+
+
 @dataclasses.dataclass
 class OffloadReport:
     eligible_ops: int
@@ -72,10 +91,14 @@ class OffloadReport:
     edp_decrease_pct: float          # paper model, current sensing @1024^2
     energy_saved_fj: float
     op_histogram: Dict[str, int]
-    multi_access_ops: int = 0        # multiply/dot ops lowered by the planner
+    multi_access_ops: int = 0        # multiply/dot/... lowered by the planner
     planner_accesses: int = 0        # total planned accesses for those ops
     banked_accesses: int = 0         # bank activations on the given ArraySpec
     bank_waves: int = 0              # serialized wave count (critical path)
+    adra_accesses: int = 0           # TOTAL planned accesses (single + multi):
+    #                                  == the executed ledger count of one
+    #                                  unbanked repro.cim.lower run (jaxpr src)
+    source: str = "hlo"
 
     @property
     def eligible_fraction(self) -> float:
@@ -86,6 +109,149 @@ class OffloadReport:
         """Activation-count / wave-count: how much of the banked access bill
         the banks absorb in parallel (1.0 = fully serialized)."""
         return self.banked_accesses / max(1, self.bank_waves)
+
+
+# ---------------------------------------------------------------------------
+# source="jaxpr": the lowering compiler's own eqn list
+# ---------------------------------------------------------------------------
+
+
+def analyze(fn, *args, scheme: str = "current", rows: int = 1024,
+            spec=None, source: str = "jaxpr") -> OffloadReport:
+    """Project ADRA savings for `fn` called with example `args`.
+
+    source="jaxpr" (default) analyzes the traced eqn list shared with the
+    lowering compiler; source="hlo" compiles through XLA and falls back to
+    the regex scan of `analyze_hlo`.
+    """
+    if source == "hlo":
+        import jax
+
+        lowered = jax.jit(fn).lower(*args)
+        try:
+            hlo = lowered.as_text("hlo")         # classic HLO text
+        except Exception:                        # pragma: no cover
+            hlo = lowered.as_text()              # StableHLO fallback
+        return analyze_hlo(hlo, scheme=scheme, rows=rows, spec=spec)
+    if source != "jaxpr":
+        raise ValueError(f"unknown offload source {source!r} "
+                         "(expected 'jaxpr' or 'hlo')")
+    from repro.cim.trace import trace
+
+    return analyze_trace(trace(fn, *args), scheme=scheme, rows=rows,
+                         spec=spec)
+
+
+def analyze_trace(tr, scheme: str = "current", rows: int = 1024,
+                  spec=None) -> OffloadReport:
+    """OffloadReport from a `repro.cim.trace.Trace` — the estimator half of
+    the shared-eligibility contract (see module docstring)."""
+    # lazy imports break the core<->cim module cycle
+    from repro.cim.accounting import project_savings
+    from repro.cim.trace import aval_of, dtype_bits
+
+    hist: Dict[str, int] = {}
+    eligible_bits = 0
+    words32 = 0.0
+    n_ops = 0
+    n_multi = 0
+    planner_accesses = 0
+    adra_accesses = 0
+    banked_accesses = 0
+    bank_waves = 0
+
+    def place(op_words: int, logical_accesses: int) -> None:
+        nonlocal banked_accesses, bank_waves
+        if spec is None or op_words < 1:
+            return
+        plan = spec.plan(op_words)
+        banked_accesses += logical_accesses * plan.n_tiles
+        bank_waves += logical_accesses * plan.waves
+
+    _HIST_NAMES = {"mul": "multiply", "dot_general": "dot",
+                   "population_count": "popcount"}
+    for op in tr.ops:
+        if not op.eligible or op.accesses == 0:
+            continue                 # free peripherals do no array work
+        bits = op.n_bits
+        n_ops += 1
+        adra_accesses += op.accesses
+        name = _HIST_NAMES.get(op.name, op.name)
+        hist[name] = hist.get(name, 0) + 1
+        place(op.words, op.accesses)
+
+        if op.kind == "single":
+            out_aval = aval_of(op.outvars[0])
+            out_bits = dtype_bits(out_aval.dtype)
+            # two operand reads + the result write, at true element widths
+            eligible_bits += (2 * bits + out_bits) * op.words
+            words32 += op.words * bits / 32.0
+            continue
+
+        n_multi += 1
+        planner_accesses += op.accesses
+        if op.name == "mul":
+            # shift-and-add works at the 2n-bit product width every access
+            words32 += op.accesses * op.words * (2 * bits) / 32.0
+            eligible_bits += 3 * op.words * bits
+        elif op.name == "dot_general":
+            lhs = aval_of(op.invars[0])
+            out = aval_of(op.outvars[0])
+            k = int(lhs.shape[1])
+            out_nel = 1
+            for d in out.shape:
+                out_nel *= int(d)
+            words32 += op.accesses * op.words * (2 * bits) / 32.0
+            eligible_bits += out_nel * k * 2 * bits + out_nel * 32
+        elif op.name == "reduce_sum":
+            words32 += op.accesses * op.words * bits / 32.0
+            eligible_bits += op.words * bits + 32
+        else:                        # population_count
+            words32 += op.accesses * op.words * bits / 32.0
+            eligible_bits += 2 * op.words * bits
+
+    # total traffic estimate: every aval the program touches, once
+    total_bits = 0
+    seen = set()
+    all_ops_vars = [v for op in tr.ops for v in op.outvars]
+    for v in list(tr.closed.jaxpr.invars) + all_ops_vars:
+        if id(v) in seen or not hasattr(v, "aval"):
+            continue
+        seen.add(id(v))
+        aval = v.aval
+        if not hasattr(aval, "shape"):
+            continue
+        nel = 1
+        for d in aval.shape:
+            nel *= int(d)
+        try:
+            b = dtype_bits(aval.dtype)
+        except Exception:
+            b = aval.dtype.itemsize * 8
+        total_bits += nel * b
+    total_bits = max(total_bits, eligible_bits)
+
+    proj = project_savings(words32, scheme=scheme, rows=rows)
+    return OffloadReport(
+        eligible_ops=n_ops,
+        eligible_bytes=_bits_to_bytes(eligible_bits),
+        total_bytes_estimate=_bits_to_bytes(total_bits),
+        words32=int(words32),
+        edp_decrease_pct=proj["edp_decrease_pct"],
+        energy_saved_fj=proj["energy_saved_fj"],
+        op_histogram=hist,
+        multi_access_ops=n_multi,
+        planner_accesses=planner_accesses,
+        banked_accesses=banked_accesses,
+        bank_waves=bank_waves,
+        adra_accesses=adra_accesses,
+        source="jaxpr",
+    )
+
+
+# ---------------------------------------------------------------------------
+# source="hlo": regex fallback over compiled HLO text
+# ---------------------------------------------------------------------------
 
 
 def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024,
@@ -102,11 +268,12 @@ def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024,
     from repro.cim.planner import plan_matmul, plan_multiply
 
     hist: Dict[str, int] = {}
-    eligible_bytes = 0
+    eligible_bits = 0
     words32 = 0.0
     n_ops = 0
     n_multi = 0
     planner_accesses = 0
+    adra_accesses = 0
     banked_accesses = 0
     bank_waves = 0
 
@@ -122,10 +289,11 @@ def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024,
         dtype, dims, op = m.group(1), m.group(2), m.group(3)
         nel = _numel(dims)
         # two operand reads + one result write at the op's element width
-        width = _BYTES.get(dtype, 4)
-        eligible_bytes += int(3 * nel * width)
-        words32 += nel * width / 4.0
+        bits = _BITS.get(dtype, 32)
+        eligible_bits += 3 * nel * bits
+        words32 += nel * bits / 32.0
         n_ops += 1
+        adra_accesses += 1
         hist[op] = hist.get(op, 0) + 1
         place(nel, 1)
 
@@ -136,10 +304,11 @@ def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024,
         accesses = plan_multiply(bits, bits).accesses
         # shift-and-add works at the 2n-bit product width on every access
         words32 += accesses * nel * (2 * bits) / 32.0
-        eligible_bytes += int(3 * nel * _BYTES.get(dtype, 4))
+        eligible_bits += 3 * nel * bits
         n_ops += 1
         n_multi += 1
         planner_accesses += accesses
+        adra_accesses += accesses
         hist["multiply"] = hist.get("multiply", 0) + 1
         place(nel, accesses)
 
@@ -156,26 +325,26 @@ def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024,
         # the packed contraction layout holds out_nel * K_pad product words
         k_pad = 1 << max(0, (k - 1).bit_length())
         words32 += sched.accesses * out_nel * k_pad * (2 * bits) / 32.0
-        # operand reads at the input width + the (4-byte) wide result write
-        eligible_bytes += int(out_nel * k * 2 * _BYTES.get(lhs_dtype, 4)
-                              + out_nel * 4)
+        # operand reads at the input width + the (32-bit) wide result write
+        eligible_bits += out_nel * k * 2 * bits + out_nel * 32
         n_ops += 1
         n_multi += 1
         planner_accesses += sched.accesses
+        adra_accesses += sched.accesses
         hist["dot"] = hist.get("dot", 0) + 1
         place(out_nel * k_pad, sched.accesses)
 
     # crude total-traffic estimate: every shaped tensor literal in the module
-    total = 0
+    total_bits = 0
     for m in _SHAPE_RE.finditer(hlo_text):
-        total += int(_numel(m.group(2)) * _BYTES.get(m.group(1), 4))
-    total = max(total, eligible_bytes)
+        total_bits += _numel(m.group(2)) * _BITS.get(m.group(1), 32)
+    total_bits = max(total_bits, eligible_bits)
 
     proj = project_savings(words32, scheme=scheme, rows=rows)
     return OffloadReport(
         eligible_ops=n_ops,
-        eligible_bytes=eligible_bytes,
-        total_bytes_estimate=total,
+        eligible_bytes=_bits_to_bytes(eligible_bits),
+        total_bytes_estimate=_bits_to_bytes(total_bits),
         words32=int(words32),
         edp_decrease_pct=proj["edp_decrease_pct"],
         energy_saved_fj=proj["energy_saved_fj"],
@@ -184,4 +353,6 @@ def analyze_hlo(hlo_text: str, scheme: str = "current", rows: int = 1024,
         planner_accesses=planner_accesses,
         banked_accesses=banked_accesses,
         bank_waves=bank_waves,
+        adra_accesses=adra_accesses,
+        source="hlo",
     )

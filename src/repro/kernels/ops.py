@@ -119,6 +119,19 @@ def cim_relu(x: jax.Array, n_bits: int = 16,
                       spec=spec, mesh=mesh).unpack()
 
 
+def cim_lower(fn, interpret: bool | None = None, backend: str | None = None,
+              spec: ArraySpec | None = None, mesh=None):
+    """Compile an unmodified JAX function into the hybrid CiM/host callable
+    (repro.cim.lower): ADRA-eligible integer subgraphs fuse into planned
+    access schedules executed through the banked dispatcher, everything
+    else runs on the host. The kernels-level entry point applies the same
+    legacy `interpret` flag resolution as the other wrappers here."""
+    from repro.cim.lower import lower
+
+    return lower(fn, backend=_resolve_backend(interpret, backend),
+                 spec=spec, mesh=mesh)
+
+
 # ---------------------------------------------------------------------------
 # Attention / recurrence with backend dispatch
 # ---------------------------------------------------------------------------

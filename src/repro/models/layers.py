@@ -6,6 +6,7 @@ dtype with f32 accumulation via preferred_element_type.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Dict
 
 import jax
@@ -128,7 +129,7 @@ def mlp(p: Params, x: jax.Array, gating: str) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Opt-in CiM-quantized linear path
+# Opt-in CiM-quantized linear path (compiled through the lowering pass)
 # ---------------------------------------------------------------------------
 
 
@@ -140,41 +141,107 @@ def quantize_symmetric(x: jax.Array, n_bits: int = 8):
     return q.astype(jnp.int32), scale
 
 
-def cim_linear(x: jax.Array, w: jax.Array, n_bits: int = 8,
-               backend: str | None = None) -> jax.Array:
-    """Opt-in CiM execution of x @ w via int8 symmetric quantization.
+def _cim_int_dtype(n_bits: int):
+    """Narrowest jnp integer dtype holding symmetric n_bits quantized values
+    — the dtype IS the eligibility signal the lowering compiler reads."""
+    if n_bits <= 8:
+        return jnp.int8
+    if n_bits <= 16:
+        return jnp.int16
+    return jnp.int32
 
-    x [..., D], w [D, F] -> f32 [..., F]. Both operands are fake-quantized
-    per-tensor, contracted EXACTLY in the CiM array (int8 x int8 -> int32
-    through the macro planner's access schedule), and rescaled. This is a
-    functional-simulation path for model-scale integer offload studies, not
-    a fast path: the packed broadcast layout materializes M*K*N words, so
-    use it on reduced configs / layer slices.
-    """
-    from repro.kernels.ops import cim_matmul
 
+def _quantized_linear(x: jax.Array, w: jax.Array, n_bits: int) -> jax.Array:
+    """Pure-jnp quantized linear: fake-quantize both operands, contract
+    EXACTLY in narrow integers, rescale. This is the function the lowering
+    compiler stages — its integer `dot_general` is the CiM-eligible eqn;
+    the float quantize/rescale stays on the host."""
     d, f = w.shape
     lead = x.shape[:-1]
     xq, sx = quantize_symmetric(x, n_bits)
     wq, sw = quantize_symmetric(w, n_bits)
-    y = cim_matmul(xq.reshape(-1, d), wq, n_bits=n_bits, backend=backend)
+    dt = _cim_int_dtype(n_bits)
+    y = jnp.matmul(xq.reshape(-1, d).astype(dt), wq.astype(dt),
+                   preferred_element_type=jnp.int32)
     return (y.astype(jnp.float32) * (sx * sw)).reshape(lead + (f,))
 
 
-def mlp_cim(p: Params, x: jax.Array, gating: str, n_bits: int = 8,
-            backend: str | None = None) -> jax.Array:
-    """The MLP with every matmul routed through the CiM-quantized path —
-    the opt-in twin of `mlp` for offload studies on reduced configs."""
-    h = cim_linear(x, p["w_in"], n_bits=n_bits, backend=backend)
+def _mlp_quantized(p: Params, x: jax.Array, gating: str,
+                   n_bits: int) -> jax.Array:
+    """The quantized MLP as one plain JAX function — the un-lowered
+    reference `mlp_cim` must match bit-for-bit."""
+    h = _quantized_linear(x, p["w_in"], n_bits)
     if gating == "swiglu":
-        g = cim_linear(x, p["w_gate"], n_bits=n_bits, backend=backend)
+        g = _quantized_linear(x, p["w_gate"], n_bits)
         h = jax.nn.silu(g) * h
     elif gating == "geglu":
-        g = cim_linear(x, p["w_gate"], n_bits=n_bits, backend=backend)
+        g = _quantized_linear(x, p["w_gate"], n_bits)
         h = jax.nn.gelu(g) * h
     else:
         h = jax.nn.gelu(h)
-    return cim_linear(h, p["w_out"], n_bits=n_bits, backend=backend).astype(x.dtype)
+    return _quantized_linear(h, p["w_out"], n_bits).astype(x.dtype)
+
+
+#: bounded LRU caches of lowered callables, keyed by everything that shapes
+#: the trace (each LoweredFunction additionally LRU-bounds its per-shape
+#: signature traces — no layer of this path grows without limit)
+_LOWERED_CACHE_CAPACITY = 32
+_LOWERED_LINEAR: "OrderedDict" = OrderedDict()
+_LOWERED_MLP: "OrderedDict" = OrderedDict()
+
+
+def _lru_get(cache, key, make):
+    lf = cache.get(key)
+    if lf is None:
+        lf = cache[key] = make()
+        while len(cache) > _LOWERED_CACHE_CAPACITY:
+            cache.popitem(last=False)
+    else:
+        cache.move_to_end(key)
+    return lf
+
+
+def _lowered_linear(n_bits: int, backend, spec, mesh):
+    from repro.cim.lower import lower
+
+    return _lru_get(
+        _LOWERED_LINEAR, (n_bits, backend, spec, mesh),
+        lambda: lower(lambda x, w: _quantized_linear(x, w, n_bits),
+                      backend=backend, spec=spec, mesh=mesh))
+
+
+def _lowered_mlp(gating: str, n_bits: int, backend, spec, mesh):
+    from repro.cim.lower import lower
+
+    return _lru_get(
+        _LOWERED_MLP, (gating, n_bits, backend, spec, mesh),
+        lambda: lower(lambda p, x: _mlp_quantized(p, x, gating, n_bits),
+                      backend=backend, spec=spec, mesh=mesh))
+
+
+def cim_linear(x: jax.Array, w: jax.Array, n_bits: int = 8,
+               backend: str | None = None, spec=None, mesh=None) -> jax.Array:
+    """Opt-in CiM execution of x @ w via intN symmetric quantization.
+
+    x [..., D], w [D, F] -> f32 [..., F]. A `lower()` application: the
+    quantized-linear function is staged once per argument signature and its
+    integer contraction executes through the planner's access schedules
+    (banked/tiled when `spec` is given) while quantize/rescale run on the
+    host — bit-exact with the un-lowered function. This is a functional-
+    simulation path for model-scale integer offload studies, not a fast
+    path: the packed broadcast layout materializes M*K*N words, so use it
+    on reduced configs / layer slices.
+    """
+    return _lowered_linear(n_bits, backend, spec, mesh)(x, w)
+
+
+def mlp_cim(p: Params, x: jax.Array, gating: str, n_bits: int = 8,
+            backend: str | None = None, spec=None, mesh=None) -> jax.Array:
+    """The MLP compiled through the jaxpr->CiM lowering pass: every integer
+    matmul executes in the CiM array, every float op (quantization scales,
+    SiLU/GELU gating) on the host — the opt-in twin of `mlp` for offload
+    studies on reduced configs."""
+    return _lowered_mlp(gating, n_bits, backend, spec, mesh)(p, x)
 
 
 # ---------------------------------------------------------------------------

@@ -38,6 +38,7 @@ from .layers import (
     lm_head,
     lm_head_init,
     mlp,
+    mlp_cim,
     mlp_init,
     rmsnorm,
     rmsnorm_init,
@@ -49,6 +50,14 @@ Params = Dict[str, Any]
 # ---------------------------------------------------------------------------
 # per-layer init / apply
 # ---------------------------------------------------------------------------
+
+
+def _apply_mlp(cfg: ArchConfig, p: Params, h):
+    """Dense-MLP dispatch: the jaxpr->CiM lowered quantized path when the
+    config opts in (cim_mlp_bits > 0), the plain dense path otherwise."""
+    if cfg.cim_mlp_bits:
+        return mlp_cim(p, h, cfg.gating, n_bits=cfg.cim_mlp_bits)
+    return mlp(p, h, cfg.gating)
 
 
 def _layer_init(key, cfg: ArchConfig, kind: str, layer_idx: int, dtype) -> Params:
@@ -150,7 +159,7 @@ def _layer_apply(
         if cfg.moe is not None and layer_idx >= cfg.first_dense_layers:
             y2, aux = moe_lib.moe_apply(p["mlp"], cfg, h2)
         else:
-            y2 = mlp(p["mlp"], h2, cfg.gating)
+            y2 = _apply_mlp(cfg, p["mlp"], h2)
         return x + y2, aux, new_cache
 
     if kind == "rec":
@@ -158,7 +167,7 @@ def _layer_apply(
         y, new_state = rec_lib.rglru_block_apply(p["rec"], cfg, h, state)
         x = x + y
         h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
-        x = x + mlp(p["mlp"], h2, cfg.gating)
+        x = x + _apply_mlp(cfg, p["mlp"], h2)
         new_cache = new_state if mode in ("prefill", "decode") else None
         return x, aux, new_cache
 

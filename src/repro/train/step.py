@@ -115,14 +115,34 @@ def greedy_sample(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def _adra_level(a, b, ia, ib):
+    """One tournament level: strict a < b picks the right entrant (ties keep
+    the earlier index, argmax semantics). Written as plain jnp so the
+    lowering compiler stages it: the comparison is a single-access engine
+    `lt` and both selects are zero-access peripheral writebacks — the whole
+    level fuses into a one-access Schedule."""
+    take_b = a < b
+    return jnp.where(take_b, b, a), jnp.where(take_b, ib, ia)
+
+
+_ADRA_LEVEL_LOWERED = None
+
+
 def adra_sample(logits: jax.Array, n_bits: int = 8) -> jax.Array:
     """Quantized argmax through the ADRA comparison primitive: logits are
     quantized to n_bits and the winner found with single-access in-memory
     comparisons (a reduction tree of engine compares) — the serving-path
-    integration of the paper's technique. Dispatches through the unified CiM
-    engine, so the backend (Pallas kernel on TPU, jnp plane math elsewhere)
-    follows the registry default."""
-    from repro.cim import compare as cim_compare
+    integration of the paper's technique. Each tournament level is compiled
+    by the jaxpr->CiM lowering pass (repro.cim.lower), which fuses the
+    compare and both index/value selects into ONE planned access; the
+    backend (Pallas kernel on TPU, jnp plane math elsewhere) follows the
+    registry default."""
+    global _ADRA_LEVEL_LOWERED
+    if _ADRA_LEVEL_LOWERED is None:
+        from repro.cim.lower import lower
+
+        _ADRA_LEVEL_LOWERED = lower(_adra_level)
+    level = _ADRA_LEVEL_LOWERED
 
     x = logits.astype(jnp.float32)
     # padded-vocab columns are -inf-masked: clamp them to the finite floor so
@@ -132,7 +152,8 @@ def adra_sample(logits: jax.Array, n_bits: int = 8) -> jax.Array:
     lo = finite_lo
     hi = jnp.max(x, axis=-1, keepdims=True)
     scale = (hi - lo) / (2 ** n_bits - 2)
-    q = jnp.round((x - lo) / jnp.maximum(scale, 1e-9)).astype(jnp.int32)
+    q = jnp.round((x - lo) / jnp.maximum(scale, 1e-9)).astype(
+        jnp.int16 if n_bits + 1 <= 16 else jnp.int32)
 
     def tree_reduce(vals, idxs):
         # pairwise single-access comparisons until one winner per row
@@ -144,10 +165,7 @@ def adra_sample(logits: jax.Array, n_bits: int = 8) -> jax.Array:
                 n += 1
             a, b = vals[..., 0::2], vals[..., 1::2]
             ia, ib = idxs[..., 0::2], idxs[..., 1::2]
-            cmp = cim_compare(a, b, n_bits=n_bits + 1)
-            take_b = cmp.lt == 1
-            vals = jnp.where(take_b, b, a)
-            idxs = jnp.where(take_b, ib, ia)
+            vals, idxs = level(a, b, ia, ib)
         return idxs[..., 0]
 
     idx0 = jnp.broadcast_to(jnp.arange(q.shape[-1], dtype=jnp.int32), q.shape)

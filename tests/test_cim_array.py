@@ -200,10 +200,14 @@ def test_schedule_cache_hits_and_misses():
     spec = ArraySpec(banks=2, subarrays=1, rows=128, bitline_words=32)
     dispatch.clear_schedule_cache()
 
+    def stats_slice():
+        s = dispatch.cache_stats()
+        return {k: s[k] for k in ("hits", "misses", "entries")}
+
     dispatch.execute_tiled(pa, pb, ("add",), spec=spec, backend="jnp-boolean")
-    assert dispatch.cache_stats() == {"hits": 0, "misses": 1, "entries": 1}
+    assert stats_slice() == {"hits": 0, "misses": 1, "entries": 1}
     dispatch.execute_tiled(pa, pb, ("add",), spec=spec, backend="jnp-boolean")
-    assert dispatch.cache_stats() == {"hits": 1, "misses": 1, "entries": 1}
+    assert stats_slice() == {"hits": 1, "misses": 1, "entries": 1}
 
     # bank count is NOT part of the key (same tile shape -> same program)...
     dispatch.execute_tiled(pa, pb, ("add",),
@@ -221,6 +225,48 @@ def test_schedule_cache_hits_and_misses():
                            backend="pallas-interpret")
     stats = dispatch.cache_stats()
     assert stats["misses"] == 4 and stats["entries"] == 4
+
+
+def test_schedule_cache_lru_bound_and_evictions():
+    """The compiled-schedule cache is a bounded LRU: inserts past capacity
+    evict the coldest program, hits refresh recency, and the eviction
+    counter reports the churn (varied tile shapes can no longer grow the
+    table without limit)."""
+    a, b = _operands(8, 100, 9)
+    pa, pb = PlanePack.pack(a, 8), PlanePack.pack(b, 8)
+    spec = ArraySpec(banks=2, subarrays=1, rows=128, bitline_words=32)
+    old_capacity = dispatch.cache_stats()["capacity"]
+    dispatch.clear_schedule_cache()
+    try:
+        dispatch.set_schedule_cache_capacity(2)
+
+        def run(ops):
+            dispatch.execute_tiled(pa, pb, ops, spec=spec,
+                                   backend="jnp-boolean")
+
+        run(("add",))                       # miss: [add]
+        run(("sub",))                       # miss: [add, sub]
+        run(("xor",))                       # miss, evicts add: [sub, xor]
+        s = dispatch.cache_stats()
+        assert s["entries"] == 2 and s["evictions"] == 1
+        run(("add",))                       # miss again (was evicted)
+        s = dispatch.cache_stats()
+        assert s["misses"] == 4 and s["evictions"] == 2  # [xor, add]
+        run(("xor",))                       # HIT: refreshes xor -> [add, xor]
+        assert dispatch.cache_stats()["hits"] == 1
+        run(("or",))                        # evicts add (coldest), keeps xor
+        run(("xor",))                       # still resident: recency worked
+        s = dispatch.cache_stats()
+        assert s["hits"] == 2 and s["entries"] == 2 and s["evictions"] == 3
+
+        # shrinking the bound evicts immediately; degenerate bounds are errors
+        dispatch.set_schedule_cache_capacity(1)
+        assert dispatch.cache_stats()["entries"] == 1
+        with pytest.raises(CimOpError):
+            dispatch.set_schedule_cache_capacity(0)
+    finally:
+        dispatch.set_schedule_cache_capacity(old_capacity)
+        dispatch.clear_schedule_cache()
 
 
 # ---------------------------------------------------------------------------

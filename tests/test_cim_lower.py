@@ -1,0 +1,428 @@
+"""Lowering-parity tests: `lower(fn)` must be bit-exact with plain `fn`.
+
+The differential contract of the jaxpr->CiM compiler (repro.cim.lower):
+for any composition of eligible ops — including mixed eligible/ineligible
+graphs, INT_MIN / -1 / 0 edges, unsigned wrap-around and dtype converts —
+the hybrid callable returns exactly what the un-lowered function returns,
+on every CPU backend. Fusion is asserted structurally (region counts,
+concatenated schedules) and physically (codec counters prove zero
+pack/unpack between chained ops; the ledger proves accesses == plan).
+
+The estimator/executor agreement is asserted too: repro.core.offload's
+jaxpr-sourced access counts equal the executed ledger counts, unbanked and
+banked.
+
+Runs under real hypothesis when installed and under the seeded-numpy
+fallback otherwise (tests/_hypothesis_compat.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cim import ArraySpec, lower
+from repro.cim.accounting import LEDGER
+from repro.core.bitplane import codec_call_counts, reset_codec_call_counts
+from repro.core.offload import analyze
+
+from _hypothesis_compat import HealthCheck, given, settings, st
+
+PORTABLE = ("jnp-boolean", "pallas-interpret")
+
+_PROP = dict(max_examples=20, deadline=None,
+             suppress_health_check=[HealthCheck.function_scoped_fixture])
+
+DTYPES = (jnp.int8, jnp.int16, jnp.int32, jnp.uint8, jnp.uint16)
+
+
+def _edge_operand(dtype, n_words, seed):
+    """Random operand with INT_MIN / -1 / 0 / 1 / MAX edges forced in."""
+    info = jnp.iinfo(dtype)
+    rng = np.random.RandomState(seed)
+    edges = np.array([info.min, info.max, 0, 1,
+                      info.min + 1, info.max - 1], np.int64)
+    n_rand = max(0, n_words - len(edges))
+    vals = np.concatenate([
+        edges, rng.randint(int(info.min), int(info.max) + 1,
+                           n_rand, dtype=np.int64)])[:n_words]
+    rng.shuffle(vals)
+    return jnp.asarray(vals.astype(np.dtype(dtype.dtype
+                                            if hasattr(dtype, "dtype")
+                                            else dtype)))
+
+
+def _assert_tree_equal(got, want):
+    got_l = jax.tree_util.tree_leaves(got)
+    want_l = jax.tree_util.tree_leaves(want)
+    assert len(got_l) == len(want_l)
+    for g, w in zip(got_l, want_l):
+        assert g.dtype == w.dtype, (g.dtype, w.dtype)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# randomly composed eligible-op graphs (the property suite)
+# ---------------------------------------------------------------------------
+
+_N_STEP_KINDS = 15
+
+
+def _apply_step(kind, sel, vals):
+    """One random graph step over the value pool (pure jnp — the reference
+    semantics ARE whatever jnp does, including promotions and wrap)."""
+    x = vals[sel % len(vals)]
+    y = vals[(sel // 7) % len(vals)]
+    if x.dtype != y.dtype:            # keep binops explicit about promotion
+        y = y.astype(x.dtype)
+    k = kind % _N_STEP_KINDS
+    if k == 0:
+        return x + y
+    if k == 1:
+        return x - y
+    if k == 2:
+        return x * y
+    if k == 3:
+        return jnp.bitwise_and(x, y)
+    if k == 4:
+        return jnp.bitwise_or(x, y)
+    if k == 5:
+        return jnp.bitwise_xor(x, y)
+    if k == 6:
+        return jnp.minimum(x, y)
+    if k == 7:
+        return jnp.maximum(x, y)
+    if k == 8:
+        return -x
+    if k == 9:
+        return ~x
+    if k == 10:                        # compare + select (free peripheral)
+        cmp = (x < y, x <= y, x > y, x >= y, x == y, x != y)[sel % 6]
+        return jnp.where(cmp, x, y)
+    if k == 11:                        # int->int convert round trip
+        return x.astype(jnp.int8).astype(x.dtype)
+    if k == 12:                        # ineligible float island (host)
+        return jnp.floor(x.astype(jnp.float32) / 3.0).astype(x.dtype)
+    if k == 13:                        # full tree reduction, re-broadcast
+        return x + jnp.sum(x)
+    return jnp.abs(x)                  # k == 14
+
+
+def _random_fn(steps):
+    def fn(a, b, c):
+        vals = [a, b, c]
+        for kind, sel in steps:
+            vals.append(_apply_step(kind, sel, vals))
+        return tuple(vals[-3:])
+    return fn
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(DTYPES) - 1),
+       st.integers(2, 8))
+@settings(**_PROP)
+def test_random_composed_graphs_bit_exact(seed, dtype_idx, n_steps):
+    rng = np.random.RandomState(seed)
+    dtype = DTYPES[dtype_idx]
+    steps = [(int(rng.randint(0, _N_STEP_KINDS)), int(rng.randint(0, 10_000)))
+             for _ in range(n_steps)]
+    fn = _random_fn(steps)
+    a = _edge_operand(dtype, 12, seed)
+    b = _edge_operand(dtype, 12, seed + 1)
+    c = _edge_operand(dtype, 12, seed + 2)
+    ref = fn(a, b, c)
+    for backend in PORTABLE:
+        _assert_tree_equal(lower(fn, backend=backend)(a, b, c), ref)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(DTYPES) - 1))
+@settings(**_PROP)
+def test_lowered_ledger_always_equals_plan(seed, dtype_idx):
+    """For any random graph, one execution charges the ledger EXACTLY the
+    planned access count — the cursor guarantee lifted to whole programs —
+    and the jaxpr-sourced offload estimate reports the same number."""
+    rng = np.random.RandomState(seed)
+    dtype = DTYPES[dtype_idx]
+    steps = [(int(rng.randint(0, _N_STEP_KINDS)), int(rng.randint(0, 10_000)))
+             for _ in range(4)]
+    fn = _random_fn(steps)
+    args = [_edge_operand(dtype, 12, seed + i) for i in range(3)]
+    lf = lower(fn, backend="jnp-boolean")
+    comp = lf.trace(*args)
+    LEDGER.reset()
+    lf(*args)
+    assert LEDGER.accesses == comp.accesses
+    assert analyze(fn, *args).adra_accesses == LEDGER.accesses
+
+
+# ---------------------------------------------------------------------------
+# fusion structure: one schedule, zero intermediate repacks
+# ---------------------------------------------------------------------------
+
+
+def test_chain_fuses_into_single_schedule_zero_repacks():
+    """>= 2 adjacent eligible eqns fuse into ONE region Schedule, and the
+    codec counters prove the only pack/unpack are the region's boundary:
+    three entry packs, one exit unpack, NOTHING between chained ops."""
+    def fn(a, b, c):
+        return ((a + b) - c) ^ a
+
+    a = jnp.arange(-16, 16, dtype=jnp.int16)
+    b, c = a + 3, a - 7
+    lf = lower(fn, backend="jnp-boolean")
+    comp = lf.trace(a, b, c)
+    assert len(comp.regions) == 1
+    region = comp.regions[0]
+    assert len(region.ops) == 3 and region.accesses == 3
+    assert region.schedule.segments == (("add", 1), ("sub", 1), ("xor", 1))
+
+    reset_codec_call_counts()
+    LEDGER.reset()
+    out = lf(a, b, c)
+    counts = codec_call_counts()
+    assert counts == {"pack": 3, "unpack": 1}, counts
+    assert LEDGER.accesses == 3
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(fn(a, b, c)))
+
+
+def test_compare_select_chain_is_one_access():
+    """lt + both selects of a tournament level fuse to a single access:
+    the selects are zero-access peripheral writebacks."""
+    def fn(a, b, ia, ib):
+        take_b = a < b
+        return jnp.where(take_b, b, a), jnp.where(take_b, ib, ia)
+
+    a = jnp.array([3, -9, 5, 7], jnp.int16)
+    b = jnp.array([3, 4, -5, 9], jnp.int16)
+    ia = jnp.arange(4, dtype=jnp.int32)
+    ib = ia + 4
+    lf = lower(fn, backend="jnp-boolean")
+    comp = lf.trace(a, b, ia, ib)
+    assert len(comp.regions) == 1 and comp.accesses == 1
+    LEDGER.reset()
+    _assert_tree_equal(lf(a, b, ia, ib), fn(a, b, ia, ib))
+    assert LEDGER.accesses == 1
+
+
+def test_mixed_graph_splits_regions_at_host_ops():
+    """An ineligible float island splits the graph into two fused regions;
+    the hybrid result stays bit-exact."""
+    def fn(a, b):
+        t = (a + b) * b                        # region 0
+        f = jnp.sin(t.astype(jnp.float32))     # host
+        q = jnp.round(f * 100.0).astype(jnp.int32)
+        return (q - a) ^ b                     # region 1
+
+    a = jnp.arange(-8, 8, dtype=jnp.int32)
+    b = 3 - a
+    lf = lower(fn, backend="jnp-boolean")
+    comp = lf.trace(a, b)
+    assert len(comp.regions) == 2
+    assert comp.host_eqns >= 3
+    np.testing.assert_array_equal(np.asarray(lf(a, b)), np.asarray(fn(a, b)))
+
+
+def test_nested_jit_output_reused_inside_inlines_correctly():
+    """pjit inlining must rename INTERNAL consumers of a nested output too:
+    a jitted subfunction whose returned intermediate also feeds another eqn
+    inside it lowers (and fuses) instead of crashing on a dangling var."""
+    @jax.jit
+    def g(x):
+        t = x + 1
+        return t, t * 2
+
+    def fn(x):
+        a, b = g(x)
+        return a - b
+
+    x = jnp.arange(-8, 8, dtype=jnp.int16)
+    lf = lower(fn, backend="jnp-boolean")
+    comp = lf.trace(x)
+    assert len(comp.regions) == 1          # add, mul, sub all fuse
+    np.testing.assert_array_equal(np.asarray(lf(x)), np.asarray(fn(x)))
+
+
+def test_closed_over_constant_as_output():
+    """A captured constant returned verbatim must round-trip through the
+    hybrid executor (constvars seed the env)."""
+    c = jnp.arange(3, dtype=jnp.int16)
+
+    def fn(x):
+        return x + 1, c
+
+    x = jnp.arange(3, dtype=jnp.int16)
+    _assert_tree_equal(lower(fn, backend="jnp-boolean")(x), fn(x))
+
+
+def test_purely_free_runs_execute_on_host():
+    """A run of only zero-access eqns (converts/reshapes) does no array
+    work and must not open a region."""
+    def fn(a):
+        return a.astype(jnp.int16).reshape(4, 2).astype(jnp.int32)
+
+    a = jnp.arange(8, dtype=jnp.int32)
+    lf = lower(fn, backend="jnp-boolean")
+    comp = lf.trace(a)
+    assert len(comp.regions) == 0 and comp.accesses == 0
+    LEDGER.reset()
+    np.testing.assert_array_equal(np.asarray(lf(a)), np.asarray(fn(a)))
+    assert LEDGER.accesses == 0
+
+
+# ---------------------------------------------------------------------------
+# contractions and the full single-access surface through lower()
+# ---------------------------------------------------------------------------
+
+
+def test_dot_general_lowered_exact_and_fused_with_elementwise():
+    def fn(x, w, bias):
+        y = jnp.matmul(x, w, preferred_element_type=jnp.int32)
+        return y + bias
+
+    x = jnp.array(np.random.RandomState(0).randint(-128, 128, (4, 6)),
+                  jnp.int8)
+    w = jnp.array(np.random.RandomState(1).randint(-128, 128, (6, 3)),
+                  jnp.int8)
+    bias = jnp.arange(3, dtype=jnp.int32)
+    lf = lower(fn, backend="jnp-boolean")
+    comp = lf.trace(x, w, bias)
+    assert len(comp.regions) == 1          # dot and bias-add share a cursor
+    LEDGER.reset()
+    np.testing.assert_array_equal(np.asarray(lf(x, w, bias)),
+                                  np.asarray(fn(x, w, bias)))
+    assert LEDGER.accesses == comp.accesses
+
+
+def test_int8_wrap_and_unsigned_semantics():
+    def fn(s, u):
+        return s * s, s + s, u + u, -u, u * u
+
+    s = jnp.array([-128, -1, 127, 100, -100, 0, 1, 64], jnp.int8)
+    u = jnp.array([0, 255, 128, 200, 1, 99, 250, 7], jnp.uint8)
+    for backend in PORTABLE:
+        _assert_tree_equal(lower(fn, backend=backend)(s, u), fn(s, u))
+
+
+def test_bool_predicates_and_logic_stay_packed():
+    def fn(a, b):
+        p = a != b
+        q = a >= b
+        return jnp.logical_and(p, q), jnp.logical_xor(p, q), p
+
+    a = jnp.array([-5, 0, 3, 3, 9, -1], jnp.int16)
+    b = jnp.array([-5, 1, -3, 3, 2, -1], jnp.int16)
+    lf = lower(fn, backend="jnp-boolean")
+    comp = lf.trace(a, b)
+    assert len(comp.regions) == 1
+    _assert_tree_equal(lf(a, b), fn(a, b))
+
+
+def test_analog_oracle_backend_tiny_chain():
+    """The device-model backend IS the paper; one small fused chain must
+    agree bit-for-bit with it too."""
+    def fn(a, b, c):
+        return (a + b) - c
+
+    a = jnp.array([-8, -1, 0, 3], jnp.int8)
+    b = jnp.array([7, 1, -2, 3], jnp.int8)
+    c = jnp.array([1, -1, 5, -6], jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(lower(fn, backend="analog-oracle")(a, b, c)),
+        np.asarray(fn(a, b, c)))
+
+
+# ---------------------------------------------------------------------------
+# estimator == executor (the shared-eligibility contract), banked included
+# ---------------------------------------------------------------------------
+
+
+def test_offload_jaxpr_counts_equal_executed_ledger_banked():
+    def fn(a, b):
+        t = (a + b) * b
+        p = t < a
+        return jnp.where(p, t, a), jnp.sum(t)
+
+    a = jnp.arange(-64, 64, dtype=jnp.int16)
+    b = 5 - a
+    spec = ArraySpec(banks=2, subarrays=1, rows=128, bitline_words=32)
+
+    rep = analyze(fn, a, b)
+    lf = lower(fn, backend="jnp-boolean")
+    LEDGER.reset()
+    _assert_tree_equal(lf(a, b), fn(a, b))
+    assert LEDGER.accesses == rep.adra_accesses
+
+    rep_banked = analyze(fn, a, b, spec=spec)
+    assert rep_banked.banked_accesses > rep_banked.adra_accesses  # >1 tile
+    lfb = lower(fn, backend="jnp-boolean", spec=spec)
+    LEDGER.reset()
+    _assert_tree_equal(lfb(a, b), fn(a, b))
+    assert LEDGER.accesses == rep_banked.banked_accesses
+
+
+def test_offload_hlo_source_still_available():
+    def fn(a, b):
+        return (a + b) * b
+
+    a = jnp.arange(16, dtype=jnp.int16)
+    rep = analyze(fn, a, a, source="hlo")
+    assert rep.source == "hlo"
+    assert rep.op_histogram.get("add") == 1
+    assert rep.op_histogram.get("multiply") == 1
+    with pytest.raises(ValueError):
+        analyze(fn, a, a, source="nope")
+
+
+def test_offload_s4_bit_accounting_rounds_once():
+    """4-bit dtypes must contribute exact bit counts, rounded to bytes once
+    at the end — no fractional bytes in the totals."""
+    from repro.core.offload import analyze_hlo
+
+    r = analyze_hlo("%x = s4[101]{0} add(s4[101] %a, s4[101] %b)\n")
+    # 3 * 101 * 4 bits = 1212 bits -> ceil = 152 bytes (not int(151.5))
+    assert r.eligible_bytes == 152
+    assert isinstance(r.eligible_bytes, int)
+    assert r.total_bytes_estimate >= r.eligible_bytes
+
+
+# ---------------------------------------------------------------------------
+# rewired callers
+# ---------------------------------------------------------------------------
+
+
+def test_mlp_cim_is_a_lowered_application():
+    from repro.models import layers
+
+    key = jax.random.PRNGKey(0)
+    p = layers.mlp_init(key, 8, 16, "swiglu", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 8), jnp.float32)
+    lf = layers._lowered_mlp("swiglu", 8, "jnp-boolean", None, None)
+    comp = lf.trace(p, x)
+    assert len(comp.regions) == 3          # one fused region per matmul
+    LEDGER.reset()
+    out = layers.mlp_cim(p, x, "swiglu", n_bits=8, backend="jnp-boolean")
+    assert LEDGER.accesses == comp.accesses
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(layers._mlp_quantized(p, x, "swiglu", 8)))
+
+
+def test_adra_sample_levels_lower_to_single_access():
+    from repro.train.step import adra_sample
+
+    rng = np.random.RandomState(3)
+    logits = jnp.asarray(rng.randn(4, 33).astype(np.float32))
+    # padded-vocab columns masked to -inf must never win
+    logits = logits.at[:, -3:].set(-1e30)
+    got = adra_sample(logits)
+    want = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernels_ops_cim_lower_entry_point():
+    from repro.kernels import ops
+
+    def fn(a, b):
+        return jnp.maximum(a - b, 0)
+
+    a = jnp.array([5, -3, 9, 0], jnp.int16)
+    b = jnp.array([1, 2, 30, 0], jnp.int16)
+    lf = ops.cim_lower(fn, backend="jnp-boolean")
+    np.testing.assert_array_equal(np.asarray(lf(a, b)), np.asarray(fn(a, b)))
