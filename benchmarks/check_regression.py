@@ -9,6 +9,9 @@ Compares a freshly produced benchmark JSON against the committed baseline
   * any access count GROWS — keys named `accesses`, `ledger_accesses`,
     `banked_accesses` or `waves`: the planner/dispatcher access model is
     exact, so any growth is a real cost regression, not noise;
+  * the jitted-dispatch count of a warm macro/region (`dispatches`) GROWS —
+    the whole-schedule compiler's guarantee is ONE dispatch per schedule,
+    and the dispatch count is the deterministic walltime proxy;
   * a gated baseline key disappeared from the current run (a silently
     dropped benchmark section must not pass the gate).
 
@@ -28,7 +31,8 @@ import json
 import sys
 
 #: key names gated as never-grow counters (exact, deterministic)
-COUNTER_KEYS = ("accesses", "ledger_accesses", "banked_accesses", "waves")
+COUNTER_KEYS = ("accesses", "ledger_accesses", "banked_accesses", "waves",
+                "dispatches")
 
 
 def _is_ratio_key(key: str) -> bool:

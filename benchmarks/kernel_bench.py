@@ -8,8 +8,12 @@ Sections:
     baseline passes: modeled and MEASURED HBM traffic, wall time, and the
     ledger's projected ADRA-array energy.
   macro — the planner's multiply / matmul schedules: access counts (asserted
-    equal to the ledger's), and fused (intermediates stay in-array) vs
-    unfused (operands re-streamed per scheduled access) traffic.
+    equal to the ledger's), fused (intermediates stay in-array) vs unfused
+    (operands re-streamed per scheduled access) traffic, steady-state
+    walltimes (block_until_ready, measured AFTER the compile call), and the
+    whole-schedule execution guarantee: a warm macro is exactly ONE jitted
+    dispatch (`dispatches` in cache_stats — the deterministic walltime proxy
+    check_regression.py gates).
   bank_sweep — the banked array substrate: the same fused op placed on 1 to
     64 banks; words/access stays fixed by the geometry while the serialized
     wave count (and with it the contention-adjusted EDP) drops with bank
@@ -22,6 +26,9 @@ Sections:
 `--json [PATH]` additionally writes the metrics as BENCH_kernel.json for CI
 artifact tracking of the perf trajectory per PR; `benchmarks/
 check_regression.py` gates CI on the committed baseline of that file.
+`--twice` runs every section a second time and asserts the warm pass is
+all schedule-cache hits with an unchanged per-pass dispatch count (zero
+retrace end to end).
 """
 import argparse
 import json
@@ -40,14 +47,33 @@ FUSED_OPS = ("xor", "sub", "lt", "eq")
 BASELINE_PASSES = (("xor",), ("sub",), ("lt", "eq"))
 
 
+def _block(out):
+    jax.tree.map(lambda x: x.block_until_ready(), jax.tree.leaves(out))
+    return out
+
+
 def _time(fn, n=5):
-    jax.tree.map(lambda x: x.block_until_ready(),
-                 jax.tree.leaves(fn()))  # warmup / compile
+    _block(fn())                         # warmup / compile
     t0 = time.perf_counter()
     for _ in range(n):
-        out = fn()
-        jax.tree.map(lambda x: x.block_until_ready(), jax.tree.leaves(out))
+        _block(fn())
     return (time.perf_counter() - t0) / n * 1e6
+
+
+def _steady_ms(fn, n=5):
+    """Steady-state walltime in ms: warm up (trace + compile happen on the
+    first call), then time `n` fully-blocked repeat calls. This is the
+    number the old benchmark got wrong by timing the first (trace-
+    inclusive) call only."""
+    return _time(fn, n) / 1e3
+
+
+def _one_call_dispatches(fn):
+    """Jitted-program invocations of one warm call of `fn`."""
+    _block(fn())                         # ensure warm
+    before = dispatch.cache_stats()["dispatches"]
+    _block(fn())
+    return dispatch.cache_stats()["dispatches"] - before
 
 
 def engine_section(metrics):
@@ -121,10 +147,18 @@ def macro_section(metrics):
     sched = planner.plan_multiply(n_bits, n_bits)
     led.reset()
     prod = cim.multiply(pa, pb, backend="jnp-boolean")
-    assert led.accesses == sched.accesses, (led.accesses, sched.accesses)
+    mul_ledger_accesses = led.accesses           # one call's charge
+    assert mul_ledger_accesses == sched.accesses, \
+        (mul_ledger_accesses, sched.accesses)
     np.testing.assert_array_equal(np.array(prod.unpack()),
                                   np.array(a) * np.array(b))
     t = planner.schedule_traffic_bytes(sched, n_bits, pa.planes.shape[1])
+    # the whole 2n-1 access schedule is ONE compiled program: a warm call
+    # is exactly one jitted dispatch (the deterministic walltime proxy)
+    mul_dispatches = _one_call_dispatches(
+        lambda: cim.multiply(pa, pb, backend="jnp-boolean"))
+    assert mul_dispatches == 1, mul_dispatches
+    ms_mul = _steady_ms(lambda: cim.multiply(pa, pb, backend="jnp-boolean"))
     print(f"macro_multiply_accesses,{n_words},{sched.accesses},"
           f"ledger-verified shift-and-add schedule")
     print(f"macro_multiply_traffic_fused_bytes,{n_words},{t['fused']:.0f},"
@@ -133,12 +167,18 @@ def macro_section(metrics):
           f"operands re-streamed per access")
     print(f"macro_multiply_traffic_ratio,{n_words},{t['ratio']:.3f},"
           f">1.5 required")
+    print(f"macro_multiply_walltime_ms,{n_words},{ms_mul:.2f},"
+          f"steady-state, block_until_ready")
+    print(f"macro_multiply_dispatches,{n_words},{mul_dispatches},"
+          f"one compiled program per schedule")
     assert t["ratio"] > 1.5, t
     metrics["macro_multiply"] = {
         "n_words": n_words,
         "accesses": sched.accesses,
-        "ledger_accesses": led.accesses,
+        "ledger_accesses": mul_ledger_accesses,
         "traffic": t,
+        "walltime_ms": ms_mul,
+        "dispatches": mul_dispatches,
     }
 
     # -- int8 matmul: planned contraction, access count vs ledger ----------
@@ -149,23 +189,38 @@ def macro_section(metrics):
     led.reset()
     t0 = time.perf_counter()
     C = cim.matmul(A, B, n_bits=8, backend="jnp-boolean")
-    ms = (time.perf_counter() - t0) * 1e3
-    assert led.accesses == msched.accesses, (led.accesses, msched.accesses)
+    _block(C)
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    mm_ledger_accesses = led.accesses            # one call's charge
+    assert mm_ledger_accesses == msched.accesses, \
+        (mm_ledger_accesses, msched.accesses)
     np.testing.assert_array_equal(
         np.array(C), np.array(A, np.int64) @ np.array(B, np.int64))
+    # the contraction's whole (2n-1)+log2(K_pad) schedule is one compiled
+    # program; steady state is one dispatch per call, zero retrace
+    mm_dispatches = _one_call_dispatches(
+        lambda: cim.matmul(A, B, n_bits=8, backend="jnp-boolean"))
+    assert mm_dispatches == 1, mm_dispatches
+    ms = _steady_ms(lambda: cim.matmul(A, B, n_bits=8, backend="jnp-boolean"))
     mt = planner.schedule_traffic_bytes(
         msched, 2 * 8, (m_ * k_ * n_ + 31) // 32, working_bits=msched.out_bits)
     print(f"macro_matmul_accesses,{m_}x{k_}x{n_},{msched.accesses},"
           f"(2n-1)+log2(K_pad): independent of M and N")
     print(f"macro_matmul_traffic_ratio,{m_}x{k_}x{n_},{mt['ratio']:.3f},"
           f"fused schedule vs per-access re-streaming")
-    print(f"macro_matmul_ms,{m_}x{k_}x{n_},{ms:.1f},jnp-boolean host walltime")
+    print(f"macro_matmul_walltime_ms,{m_}x{k_}x{n_},{ms:.2f},"
+          f"steady-state, block_until_ready (compile-inclusive "
+          f"first call: {cold_ms:.0f} ms)")
+    print(f"macro_matmul_dispatches,{m_}x{k_}x{n_},{mm_dispatches},"
+          f"one jitted dispatch per schedule")
     metrics["macro_matmul"] = {
         "shape": [m_, k_, n_],
         "accesses": msched.accesses,
-        "ledger_accesses": led.accesses,
+        "ledger_accesses": mm_ledger_accesses,
         "traffic": mt,
         "walltime_ms": ms,
+        "compile_ms": cold_ms,
+        "dispatches": mm_dispatches,
     }
 
     # projected array energy for the macro ops just charged
@@ -264,9 +319,19 @@ def lowering_section(metrics):
     np.testing.assert_array_equal(
         np.array(out), np.array(layers._mlp_quantized(p, x, "swiglu",
                                                       n_bits)))
-    assert led.accesses == comp.accesses, (led.accesses, comp.accesses)
+    mlp_ledger_accesses = led.accesses           # one call's charge
+    assert mlp_ledger_accesses == comp.accesses, \
+        (mlp_ledger_accesses, comp.accesses)
     rep = analyze_trace(comp.trace)
-    assert rep.adra_accesses == led.accesses, (rep.adra_accesses, led.accesses)
+    assert rep.adra_accesses == mlp_ledger_accesses, \
+        (rep.adra_accesses, mlp_ledger_accesses)
+
+    # each fused region is ONE compiled program: a warm MLP call costs
+    # exactly len(regions) jitted dispatches, nothing per access
+    mlp_dispatches = _one_call_dispatches(lambda: lf(p, x))
+    assert mlp_dispatches == len(comp.regions), \
+        (mlp_dispatches, len(comp.regions))
+    mlp_ms = _steady_ms(lambda: lf(p, x))
 
     # lowered traffic: fused region schedules (operands stream once, every
     # intermediate stays in-array) vs the near-memory baseline re-streaming
@@ -288,6 +353,10 @@ def lowering_section(metrics):
           f"ledger- and offload-verified hybrid program")
     print(f"lowering_mlp_traffic_ratio,{shape},{ratio:.3f},"
           f"fused regions vs near-memory re-streaming, >1.5 required")
+    print(f"lowering_mlp_walltime_ms,{shape},{mlp_ms:.2f},"
+          f"steady-state, block_until_ready")
+    print(f"lowering_mlp_dispatches,{shape},{mlp_dispatches},"
+          f"one jitted dispatch per fused region")
     assert ratio > 1.5, ratio
     metrics["lowering"] = {
         "mlp": {
@@ -295,9 +364,11 @@ def lowering_section(metrics):
             "regions": len(comp.regions),
             "eligible_eqns": comp.eligible_eqns,
             "accesses": comp.accesses,
-            "ledger_accesses": led.accesses,
+            "ledger_accesses": mlp_ledger_accesses,
             "traffic": {"fused": fused, "baseline": baseline,
                         "ratio": ratio},
+            "walltime_ms": mlp_ms,
+            "dispatches": mlp_dispatches,
         },
     }
 
@@ -309,13 +380,35 @@ def main(argv=()):
     ap.add_argument("--json", nargs="?", const="BENCH_kernel.json",
                     default=None, metavar="PATH",
                     help="also write metrics to PATH (default BENCH_kernel.json)")
+    ap.add_argument("--twice", action="store_true",
+                    help="run every section a second time and assert the "
+                         "warm pass is all schedule-cache hits with an "
+                         "unchanged per-pass dispatch count")
     args = ap.parse_args(list(argv))
 
+    def run_sections(metrics):
+        engine_section(metrics)
+        macro_section(metrics)
+        bank_sweep_section(metrics)
+        lowering_section(metrics)
+
+    s0 = dispatch.cache_stats()
     metrics = {}
-    engine_section(metrics)
-    macro_section(metrics)
-    bank_sweep_section(metrics)
-    lowering_section(metrics)
+    run_sections(metrics)
+
+    if args.twice:
+        s1 = dispatch.cache_stats()
+        run_sections({})
+        s2 = dispatch.cache_stats()
+        warm_misses = s2["misses"] - s1["misses"]
+        cold_dispatches = s1["dispatches"] - s0["dispatches"]
+        warm_dispatches = s2["dispatches"] - s1["dispatches"]
+        print(f"bench_warm_pass_cache,{s2['hits'] - s1['hits']},"
+              f"{warm_misses},second pass must be all hits")
+        print(f"bench_warm_pass_dispatches,{cold_dispatches},"
+              f"{warm_dispatches},per-pass dispatch count must not change")
+        assert warm_misses == 0, (s1, s2)
+        assert warm_dispatches == cold_dispatches, (s1, s2)
 
     if args.json:
         with open(args.json, "w") as f:

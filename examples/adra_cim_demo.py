@@ -6,7 +6,15 @@ single-access read, the full compute-module subtraction/comparison, and the
 energy/EDP headline numbers for all three sensing schemes.
 
   PYTHONPATH=src python examples/adra_cim_demo.py
+
+Every CiM section prints its walltime plus the compiled-schedule cache /
+dispatch deltas, so the whole-schedule execution speedup (one jitted XLA
+dispatch per macro or fused region, warm calls all cache hits) is visible
+directly in the demo output.
 """
+import contextlib
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -27,6 +35,23 @@ from repro.core.sensing import (
     symmetric_sense_is_ambiguous,
     voltage_sense_margins,
 )
+from repro.cim import dispatch as cim_dispatch
+
+
+@contextlib.contextmanager
+def section(title):
+    """Time a demo section and report its dispatch/cache activity."""
+    print(f"\n{title}")
+    before = cim_dispatch.cache_stats()
+    t0 = time.perf_counter()
+    yield
+    ms = (time.perf_counter() - t0) * 1e3
+    after = cim_dispatch.cache_stats()
+    print(f"   -- {ms:.1f} ms | dispatches "
+          f"+{after['dispatches'] - before['dispatches']}, schedule cache "
+          f"+{after['hits'] - before['hits']} hits / "
+          f"+{after['misses'] - before['misses']} misses")
+
 
 cfg = AdraArrayConfig()
 
@@ -59,75 +84,99 @@ cmp_ = cim_compare(x, y, n_bits=8, mode="analog")
 print(f"   x={np.array(x)}, y={np.array(y)}")
 print(f"   x-y={np.array(sub.value)}, lt={np.array(cmp_.lt)}, eq={np.array(cmp_.eq)}")
 
-print("\n5) unified CiM engine: same op surface, any backend, one access:")
 from repro import cim
 from repro.cim import PlanePack
 
-pa, pb = PlanePack.pack(x, 8), PlanePack.pack(y, 8)
-for backend in ("jnp-boolean", "pallas-interpret", "analog-oracle"):
-    out = cim.execute(pa, pb, ("xor", "sub", "lt"), backend=backend)
-    print(f"   [{backend:16s}] xor={np.array(out['xor'].unpack())} "
-          f"sub={np.array(out['sub'].unpack())} lt={np.array(out['lt'].unpack())}")
-led = cim.ledger()
-print(f"   ledger: {led.accesses} accesses charged, "
-      f"projected EDP -{led.projected()['edp_decrease_pct']:.1f}%")
+with section("5) unified CiM engine: same op surface, any backend, one access:"):
+    pa, pb = PlanePack.pack(x, 8), PlanePack.pack(y, 8)
+    for backend in ("jnp-boolean", "pallas-interpret", "analog-oracle"):
+        out = cim.execute(pa, pb, ("xor", "sub", "lt"), backend=backend)
+        print(f"   [{backend:16s}] xor={np.array(out['xor'].unpack())} "
+              f"sub={np.array(out['sub'].unpack())} lt={np.array(out['lt'].unpack())}")
+    led = cim.ledger()
+    print(f"   ledger: {led.accesses} accesses charged, "
+          f"projected EDP -{led.projected()['edp_decrease_pct']:.1f}%")
 
-print("\n6) macro-op planner: multi-access arithmetic as access schedules:")
 from repro.cim import planner
 
-mul_plan = planner.plan_multiply(8, 8)
-print(f"   multiply 8x8 plan: {mul_plan.accesses} accesses "
-      f"{[s.ops[0] for s in mul_plan.steps]}")
-led.reset()
-prod = cim.multiply(PlanePack.pack(x, 8), PlanePack.pack(y, 8),
-                    backend="jnp-boolean")
-print(f"   x*y={np.array(prod.unpack())}  (ledger charged {led.accesses} "
-      f"accesses = plan length)")
-t = planner.schedule_traffic_bytes(mul_plan, 8, prod.planes.shape[1])
-print(f"   fused schedule traffic {t['fused']:.0f} B vs unfused "
-      f"{t['baseline']:.0f} B -> {t['ratio']:.1f}x (intermediates stay in-array)")
-A = jnp.array([[1, -2, 3], [4, 5, -6]], jnp.int32)
-B = jnp.array([[7, -8], [9, 10], [-11, 12]], jnp.int32)
-mm_plan = planner.plan_matmul(3, 2, n_bits=8)
-led.reset()
-C = cim.matmul(A, B, n_bits=8, backend="jnp-boolean")
-print(f"   int8 matmul [2,3]x[3,2] -> {np.array(C).tolist()} in "
-      f"{led.accesses} accesses (plan {mm_plan.accesses}; "
-      f"independent of M and N)")
+with section("6) macro-op planner: multi-access arithmetic as access "
+             "schedules, each compiled to ONE jitted dispatch:"):
+    mul_plan = planner.plan_multiply(8, 8)
+    print(f"   multiply 8x8 plan: {mul_plan.accesses} accesses "
+          f"{[s.ops[0] for s in mul_plan.steps]}")
+    led.reset()
+    prod = cim.multiply(PlanePack.pack(x, 8), PlanePack.pack(y, 8),
+                        backend="jnp-boolean")
+    print(f"   x*y={np.array(prod.unpack())}  (ledger charged {led.accesses} "
+          f"accesses = plan length)")
+    t = planner.schedule_traffic_bytes(mul_plan, 8, prod.planes.shape[1])
+    print(f"   fused schedule traffic {t['fused']:.0f} B vs unfused "
+          f"{t['baseline']:.0f} B -> {t['ratio']:.1f}x (intermediates stay in-array)")
+    A = jnp.array([[1, -2, 3], [4, 5, -6]], jnp.int32)
+    B = jnp.array([[7, -8], [9, 10], [-11, 12]], jnp.int32)
+    mm_plan = planner.plan_matmul(3, 2, n_bits=8)
+    led.reset()
+    C = cim.matmul(A, B, n_bits=8, backend="jnp-boolean")
+    print(f"   int8 matmul [2,3]x[3,2] -> {np.array(C).tolist()} in "
+          f"{led.accesses} accesses (plan {mm_plan.accesses}; "
+          f"independent of M and N)")
 
-print("\n7) jaxpr->CiM lowering compiler: unmodified JAX -> hybrid execution:")
 from repro.cim import ArraySpec, lower
 from repro.models import layers
 
-key = jax.random.PRNGKey(0)
-p = layers.mlp_init(key, 8, 16, "swiglu", jnp.float32)
-xs = jax.random.normal(jax.random.PRNGKey(1), (2, 8), jnp.float32)
-spec = ArraySpec(banks=4, subarrays=1, rows=128, bitline_words=32)
-mlp_lowered = layers._lowered_mlp("swiglu", 8, "jnp-boolean", spec, None)
-comp = mlp_lowered.trace(p, xs)
-for line in comp.describe().splitlines():
-    print("   " + line)
-led.reset()
-y_low = mlp_lowered(p, xs)
-y_ref = layers._mlp_quantized(p, xs, "swiglu", 8)
-print(f"   bit-exact vs un-lowered mlp: "
-      f"{bool(jnp.all(y_low == y_ref))}  (ledger charged {led.accesses} "
-      f"banked activations)")
-rep = led.bank_report(spec)
-print(f"   bank report: {rep['activations']:.0f} activations over "
-      f"{rep['banks']:.0f} banks, {rep['waves']:.0f} waves, "
-      f"utilization {rep['utilization']:.2f}, "
-      f"EDP -{rep['edp_decrease_pct']:.1f}% vs near-memory")
+with section("7) jaxpr->CiM lowering compiler: unmodified JAX -> hybrid "
+             "execution, one dispatch per fused region:"):
+    key = jax.random.PRNGKey(0)
+    p = layers.mlp_init(key, 8, 16, "swiglu", jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, 8), jnp.float32)
+    spec = ArraySpec(banks=4, subarrays=1, rows=128, bitline_words=32)
+    mlp_lowered = layers._lowered_mlp("swiglu", 8, "jnp-boolean", spec, None)
+    comp = mlp_lowered.trace(p, xs)
+    for line in comp.describe().splitlines():
+        print("   " + line)
+    led.reset()
+    y_low = mlp_lowered(p, xs)
+    y_ref = layers._mlp_quantized(p, xs, "swiglu", 8)
+    print(f"   bit-exact vs un-lowered mlp: "
+          f"{bool(jnp.all(y_low == y_ref))}  (ledger charged {led.accesses} "
+          f"banked activations)")
+    rep = led.bank_report(spec)
+    print(f"   bank report: {rep['activations']:.0f} activations over "
+          f"{rep['banks']:.0f} banks, {rep['waves']:.0f} waves, "
+          f"utilization {rep['utilization']:.2f}, "
+          f"EDP -{rep['edp_decrease_pct']:.1f}% vs near-memory")
 
-x16 = jnp.array(x, jnp.int16)
-y16 = jnp.array(y, jnp.int16)
-fused_chain = lower(lambda a, b: jnp.where((a + b) - 3 < a, a, b),
-                    backend="jnp-boolean")
-chain_comp = fused_chain.trace(x16, y16)
-print(f"   fused chain {chain_comp.regions[0].schedule.segments} -> "
-      f"{chain_comp.accesses} accesses, select is free periphery")
+    x16 = jnp.array(x, jnp.int16)
+    y16 = jnp.array(y, jnp.int16)
+    fused_chain = lower(lambda a, b: jnp.where((a + b) - 3 < a, a, b),
+                        backend="jnp-boolean")
+    chain_comp = fused_chain.trace(x16, y16)
+    fused_chain(x16, y16)
+    print(f"   fused chain {chain_comp.regions[0].schedule.segments} -> "
+          f"{chain_comp.accesses} accesses, select is free periphery")
 
-print("\n8) energy/latency model (calibrated to the paper's SPICE anchors):")
+with section("8) whole-schedule compiled execution: warm macros are one "
+             "XLA dispatch, zero retrace:"):
+    rng = np.random.RandomState(7)
+    Am = jnp.array(rng.randint(-128, 128, (16, 32)), jnp.int32)
+    Bm = jnp.array(rng.randint(-128, 128, (32, 8)), jnp.int32)
+
+    def timed_matmul():
+        t0 = time.perf_counter()
+        out = cim.matmul(Am, Bm, n_bits=8, backend="jnp-boolean")
+        out.block_until_ready()
+        return (time.perf_counter() - t0) * 1e3
+
+    cold = timed_matmul()                 # traces + compiles the schedule
+    warm = min(timed_matmul() for _ in range(3))
+    cs = cim_dispatch.cache_stats()
+    print(f"   int8 matmul [16,32]x[32,8]: {cold:.1f} ms cold "
+          f"(trace + XLA compile) -> {warm:.2f} ms warm "
+          f"({cold / max(warm, 1e-9):.0f}x), one dispatch per call")
+    print(f"   schedule cache: {cs['hits']} hits / {cs['misses']} misses / "
+          f"{cs['evictions']} evictions, {cs['dispatches']} dispatches total")
+
+print("\n9) energy/latency model (calibrated to the paper's SPICE anchors):")
 for name, r in [("current sensing", current_sensing(1024)),
                 ("voltage scheme 1", voltage_scheme1(1024)),
                 ("voltage scheme 2", voltage_scheme2(1024))]:

@@ -16,7 +16,10 @@ any registered backend:
   planner     — macro-op planner: multi-access computations lowered to
                 explicit access Schedules (the cost model IS the plan)
   macro       — schedule executors: multiply, abs/relu/min/max, popcount,
-                tree reduce_sum, int8 dot/matmul — all in the packed domain
+                tree reduce_sum, int8 dot/matmul — all in the packed
+                domain, each compiled to ONE jitted XLA dispatch per
+                schedule (run_schedule_program) with ledger charges
+                replayed from the plan
   accounting  — per-op energy ledger wired through repro.core.energy,
                 extended with per-(device, bank) activation slots and a
                 contention-adjusted EDP projection
@@ -85,6 +88,7 @@ from .lower import (  # noqa: F401
 from .trace import Trace, TracedOp, trace  # noqa: F401
 from .macro import (  # noqa: F401
     ChainExecutor,
+    CompiledSchedule,
     ScheduleCursor,
     abs_,
     dot,
@@ -95,6 +99,7 @@ from .macro import (  # noqa: F401
     popcount,
     reduce_sum,
     relu,
+    run_schedule_program,
     select,
 )
 from .opset import (  # noqa: F401

@@ -16,15 +16,19 @@ energy follows ACTIVATED words (idle columns still burn bitline energy),
 latency follows the busiest bank's wave count (banks run concurrently,
 waves serialize).
 
-Charging happens at Python trace time: under jit, a call site is charged once
-per compilation, not once per device execution. That is the right granularity
-for the model-level projections here (per-op costs are multiplied out by the
-word counts); benchmarks that need per-invocation counts run unjitted.
+Charging happens at Python call time, never inside a compiled program. The
+whole-schedule execution path (repro.cim.macro.run_schedule_program) makes
+that explicit: tracing a schedule records its charges into a `PlannedCharges`
+object — charge-from-plan, which PR 2-4's cursor guarantee proves equals the
+execution — and every invocation of the compiled program replays that record
+into the ledger. A call site compiled into a larger jit is charged once per
+outer trace (once per compiled shape), eager call sites once per invocation;
+both exactly as before the schedules were compiled.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.core import energy
 
@@ -168,6 +172,47 @@ class Ledger:
 
 #: process-wide ledger the engine charges into
 LEDGER = Ledger()
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannedCharges:
+    """The ledger record of ONE schedule execution, computed from the plan.
+
+    Compiling a schedule into a single XLA program removes the per-access
+    Python call sites the ledger used to be charged from; this object is
+    their replacement. While the step program is being traced, each planned
+    access appends one entry — ("access", ops, n_bits, n_words) for the
+    unbanked engine, ("banked", ops, n_bits, n_words, plan, n_devices) for
+    the tiling dispatcher, ("reduction", words32) for inter-bank reduction
+    traffic — and `replay()` applies the whole record to the ledger on every
+    invocation of the compiled program. Because the ScheduleCursor refuses
+    any access its plan does not contain, the record provably matches both
+    the plan and the execution: accesses == schedule.accesses still holds by
+    construction, now at zero per-access Python cost.
+    """
+
+    entries: Tuple[Tuple, ...]
+
+    @property
+    def accesses(self) -> int:
+        """Array accesses one replay charges (logical, not per-tile)."""
+        return sum(1 for e in self.entries if e[0] in ("access", "banked"))
+
+    def replay(self, ledger: Optional["Ledger"] = None) -> None:
+        led = LEDGER if ledger is None else ledger
+        for entry in self.entries:
+            kind = entry[0]
+            if kind == "access":
+                _, ops, n_bits, n_words = entry
+                led.charge(ops, n_bits, n_words)
+            elif kind == "banked":
+                _, ops, n_bits, n_words, plan, n_devices = entry
+                led.charge_banked(ops, n_bits, n_words, plan,
+                                  n_devices=n_devices)
+            elif kind == "reduction":
+                led.charge_reduction(entry[1])
+            else:                              # pragma: no cover
+                raise ValueError(f"unknown charge entry {kind!r}")
 
 
 def ledger() -> Ledger:

@@ -8,11 +8,14 @@ packed lane axis on uint32 boundaries.
 
 Two substrate services live here as well:
 
-  * a compiled-schedule cache, keyed by (ops, n_bits, tile shape, backend,
-    placement): repeated planner schedules reuse the jitted, vmapped (and
-    possibly shard_mapped) program instead of retracing a fresh closure per
-    call. `cache_stats()` exposes hit/miss counters; benchmarks assert the
-    hit path.
+  * a compiled-schedule cache: a bounded LRU of jitted programs keyed by
+    schedule structure. It holds both the per-step tiled programs built
+    here (key: ops, n_bits, tile shape, backend, placement) and the
+    WHOLE-schedule step programs built by repro.cim.macro — one jitted XLA
+    dispatch covering every access of a macro or fused region. `cache_stats()`
+    exposes hit/miss/eviction counters plus `dispatches`, the number of
+    jitted-program invocations — the deterministic walltime proxy the
+    benchmarks gate on (a warm macro matmul is exactly ONE dispatch).
   * a `jax.shard_map` path over the production/smoke meshes of
     repro.launch.mesh: pass `mesh=` and tiles are block-distributed over the
     mesh's "data" axis, each device executing (and its ledger slice being
@@ -82,20 +85,51 @@ _CAPACITY = _env_capacity()
 _HITS = 0
 _MISSES = 0
 _EVICTIONS = 0
+_DISPATCHES = 0
 
 
 def cache_stats() -> Dict[str, int]:
-    """Hit/miss/eviction counters of the compiled-schedule cache."""
+    """Counters of the compiled-schedule cache: hits/misses/evictions of
+    the program table plus `dispatches`, the total number of jitted-program
+    invocations (whole-schedule step programs and per-step tiled programs
+    alike). A warm macro or fused region costs exactly one dispatch."""
     return {"hits": _HITS, "misses": _MISSES, "entries": len(_PROGRAMS),
-            "evictions": _EVICTIONS, "capacity": _CAPACITY}
+            "evictions": _EVICTIONS, "capacity": _CAPACITY,
+            "dispatches": _DISPATCHES}
 
 
 def clear_schedule_cache() -> None:
-    global _HITS, _MISSES, _EVICTIONS
+    global _HITS, _MISSES, _EVICTIONS, _DISPATCHES
     _PROGRAMS.clear()
     _HITS = 0
     _MISSES = 0
     _EVICTIONS = 0
+    _DISPATCHES = 0
+
+
+def count_dispatch(n: int = 1) -> None:
+    """Record `n` jitted-program invocations (see cache_stats)."""
+    global _DISPATCHES
+    _DISPATCHES += n
+
+
+def program_cache_get(key):
+    """Look up a compiled program, counting a hit (and refreshing LRU
+    recency) or a miss. Callers that miss MUST build and `program_cache_put`
+    under the same key."""
+    global _HITS, _MISSES
+    prog = _PROGRAMS.get(key)
+    if prog is not None:
+        _HITS += 1
+        _PROGRAMS.move_to_end(key)
+        return prog
+    _MISSES += 1
+    return None
+
+
+def program_cache_put(key, prog) -> None:
+    _PROGRAMS[key] = prog
+    _evict_to_capacity()
 
 
 def set_schedule_cache_capacity(capacity: int) -> None:
@@ -125,33 +159,35 @@ def _cached_program(ops: Tuple[str, ...], n_bits: int, tile_shape: tuple,
     a hit refreshes recency, an insert past capacity evicts the coldest
     program (it recompiles on next use — correctness never depends on
     residency)."""
-    global _HITS, _MISSES
     # the mesh object itself (hashable) is the key component: two meshes of
     # identical shape over DIFFERENT devices must not share a program
     key = (ops, n_bits, tile_shape, bk.name,
            None if mesh is None else (mesh, axis))
-    prog = _PROGRAMS.get(key)
+    prog = program_cache_get(key)
     if prog is not None:
-        _HITS += 1
-        _PROGRAMS.move_to_end(key)
         return prog
-    _MISSES += 1
+
+    prog = jax.jit(_tiled_body(ops, bk, mesh, axis))
+    program_cache_put(key, prog)
+    return prog
+
+
+def _tiled_body(ops: Tuple[str, ...], bk: Backend, mesh, axis):
+    """The (unjitted) tiled computation: vmap the fused backend over the
+    tile axis, shard_mapped over `axis` when a mesh is given. Shared by the
+    eager per-step program above and the traced whole-schedule path below
+    (where the enclosing step program provides the jit)."""
 
     def tiled(ta, tb):
         return jax.vmap(lambda ap, bp: bk.fn(ap, bp, ops))(ta, tb)
 
     if mesh is None:
-        prog = jax.jit(tiled)
-    else:
-        from jax.sharding import PartitionSpec as P
+        return tiled
+    from jax.sharding import PartitionSpec as P
 
-        spec3 = P(axis, None, None)
-        prog = jax.jit(_shard_map(tiled, mesh,
-                                  in_specs=(spec3, spec3),
-                                  out_specs=tuple(spec3 for _ in ops)))
-    _PROGRAMS[key] = prog
-    _evict_to_capacity()
-    return prog
+    spec3 = P(axis, None, None)
+    return _shard_map(tiled, mesh, in_specs=(spec3, spec3),
+                      out_specs=tuple(spec3 for _ in ops))
 
 
 # ---------------------------------------------------------------------------
@@ -180,17 +216,10 @@ def _untile(raw: jax.Array, w: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def execute_tiled(a: PlanePack, b: PlanePack, ops: Sequence[str],
-                  spec: Optional[ArraySpec] = None,
-                  backend: Optional[str] = None,
-                  mesh=None, axis: str = "data") -> engine.Outputs:
-    """One logical ADRA access on a banked array: bank-sized tiles, vmapped
-    (and, with `mesh`, shard_mapped over its `axis`) over the fused backend.
-
-    Bit-exact with engine.execute; the difference is physical: the ledger is
-    charged one activation per tile, attributed to (device, bank), and the
-    last tile's idle columns are charged as activated-but-idle words.
-    """
+def _prepare_tiles(a: PlanePack, b: PlanePack, ops: Sequence[str],
+                   spec: Optional[ArraySpec], mesh, axis: str):
+    """Shared front half of the tiled paths: operand alignment, geometry
+    checks, tile placement and the padded tile stacks."""
     a, b, ops = engine.prepare_operands(a, b, ops)
     spec = spec or DEFAULT_SPEC
     spec.check_fits(a.n_bits, ops)
@@ -207,18 +236,60 @@ def execute_tiled(a: PlanePack, b: PlanePack, ops: Sequence[str],
         # number of tiles; pad tiles hold no operands and are not charged
         exec_tiles = -(-plan.n_tiles // n_devices) * n_devices
 
-    bk = get_backend(backend)
     ta = _tile(a.planes, plan, exec_tiles)
     tb = _tile(b.planes, plan, exec_tiles)
-    prog = _cached_program(ops, a.n_bits, tuple(ta.shape[1:]), bk,
-                           mesh, axis if mesh is not None else None)
-    raws = prog(ta, tb)
+    return a, b, ops, plan, n_devices, ta, tb
 
-    LEDGER.charge_banked(ops, a.n_bits, a.n_words, plan,
-                         n_devices=n_devices)
+
+def _wrap_tiled(a: PlanePack, ops: Tuple[str, ...],
+                raws) -> engine.Outputs:
     w = a.planes.shape[1]
     return {op: engine._wrap(op, _untile(raw, w), a.n_bits, a.shape)
             for op, raw in zip(ops, raws)}
+
+
+def execute_tiled(a: PlanePack, b: PlanePack, ops: Sequence[str],
+                  spec: Optional[ArraySpec] = None,
+                  backend: Optional[str] = None,
+                  mesh=None, axis: str = "data") -> engine.Outputs:
+    """One logical ADRA access on a banked array: bank-sized tiles, vmapped
+    (and, with `mesh`, shard_mapped over its `axis`) over the fused backend.
+
+    Bit-exact with engine.execute; the difference is physical: the ledger is
+    charged one activation per tile, attributed to (device, bank), and the
+    last tile's idle columns are charged as activated-but-idle words.
+    """
+    a, b, ops, plan, n_devices, ta, tb = _prepare_tiles(
+        a, b, ops, spec, mesh, axis)
+    bk = get_backend(backend)
+    prog = _cached_program(ops, a.n_bits, tuple(ta.shape[1:]), bk,
+                           mesh, axis if mesh is not None else None)
+    raws = prog(ta, tb)
+    count_dispatch()      # invoke first, account after (as CompiledSchedule)
+
+    LEDGER.charge_banked(ops, a.n_bits, a.n_words, plan,
+                         n_devices=n_devices)
+    return _wrap_tiled(a, ops, raws)
+
+
+def execute_tiled_traced(a: PlanePack, b: PlanePack, ops: Sequence[str],
+                         spec: Optional[ArraySpec] = None,
+                         backend: Optional[str] = None,
+                         mesh=None, axis: str = "data",
+                         charges: Optional[list] = None) -> engine.Outputs:
+    """The side-effect-free inner form of `execute_tiled`: the same tiled
+    (and shard_mapped) computation applied INLINE — no inner jit, no ledger
+    mutation — so a whole-schedule step program can trace banked accesses
+    into one XLA dispatch. With `charges`, appends the charge-from-plan
+    record `execute_tiled` would have applied."""
+    a, b, ops, plan, n_devices, ta, tb = _prepare_tiles(
+        a, b, ops, spec, mesh, axis)
+    bk = get_backend(backend)
+    raws = _tiled_body(ops, bk, mesh, axis if mesh is not None else None)(
+        ta, tb)
+    if charges is not None:
+        charges.append(("banked", ops, a.n_bits, a.n_words, plan, n_devices))
+    return _wrap_tiled(a, ops, raws)
 
 
 def execute_sharded(a: PlanePack, b: PlanePack, ops: Sequence[str], mesh,

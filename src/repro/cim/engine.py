@@ -52,6 +52,27 @@ def prepare_operands(a: PlanePack, b: PlanePack, ops: Sequence[str]
     return a, b, ops
 
 
+def execute_traced(a: PlanePack, b: PlanePack, ops: Sequence[str],
+                   backend: Optional[str] = None,
+                   charges: Optional[list] = None) -> Outputs:
+    """The side-effect-free inner form of `execute`: pure computation, no
+    ledger mutation, so a whole schedule of these can be traced into ONE
+    jitted XLA program (repro.cim.macro.run_schedule_program).
+
+    With `charges`, the access this call represents is appended as a
+    charge-from-plan record — ("access", ops, n_bits, n_words) at the
+    post-alignment width, exactly what `execute` would have charged — for
+    the compiled program to replay per invocation (accounting.PlannedCharges).
+    """
+    a, b, ops = prepare_operands(a, b, ops)
+    bk = get_backend(backend)
+    raws = bk(a.planes, b.planes, ops)
+    if charges is not None:
+        charges.append(("access", ops, a.n_bits, a.n_words))
+    return {op: _wrap(op, raw, a.n_bits, a.shape)
+            for op, raw in zip(ops, raws)}
+
+
 def execute(a: PlanePack, b: PlanePack, ops: Sequence[str],
             backend: Optional[str] = None) -> Outputs:
     """One ADRA access: every requested op from a single streamed pass.
@@ -60,12 +81,11 @@ def execute(a: PlanePack, b: PlanePack, ops: Sequence[str],
     first. Returns {op: PlanePack}; predicates come back as 1-plane unsigned
     packs (unpack() gives 0/1 per word).
     """
-    a, b, ops = prepare_operands(a, b, ops)
-    bk = get_backend(backend)
-    raws = bk(a.planes, b.planes, ops)
-    LEDGER.charge(ops, a.n_bits, a.n_words, accesses=1)
-    return {op: _wrap(op, raw, a.n_bits, a.shape)
-            for op, raw in zip(ops, raws)}
+    charges: list = []
+    out = execute_traced(a, b, ops, backend=backend, charges=charges)
+    for _, c_ops, n_bits, n_words in charges:
+        LEDGER.charge(c_ops, n_bits, n_words, accesses=1)
+    return out
 
 
 def execute_unfused(a: PlanePack, b: PlanePack,

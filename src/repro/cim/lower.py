@@ -6,11 +6,19 @@
      (single-access / multi-access / free peripheral / host).
   2. Maximal runs of eligible eqns become fused REGIONS. Each region's
      per-eqn schedules are concatenated (planner.concat_schedules) into ONE
-     region Schedule, executed through one macro.ChainExecutor — so chained
-     eligible ops share a cursor and their intermediates stay in the
-     PlanePack packed domain with ZERO pack/unpack between them. The only
-     codec entries are the region's external inputs (pack) and the outputs
-     a host eqn or the caller consumes (unpack).
+     region Schedule, compiled by macro.run_schedule_program into ONE
+     jitted XLA program: every access of every fused eqn, all the
+     packed-domain peripherals between them, the entry packs and the exit
+     unpacks execute as a single dispatch. Chained eligible ops share the
+     program's cursor (a ChainExecutor over it) and their intermediates
+     stay in the PlanePack packed domain with ZERO pack/unpack between
+     them. Region programs live in the dispatch layer's bounded-LRU cache
+     under a STRUCTURAL key (canonicalized dataflow + operand signatures),
+     so repeated regions hit end-to-end with zero retrace; ledger charges
+     replay from the trace-time PlannedCharges record. Region inputs that
+     are dead after the region (intermediates, never the caller's arrays)
+     are donated to the program on accelerator platforms, letting XLA reuse
+     their buffers for the accumulator chain.
   3. Everything else executes on the host, eqn by eqn, exactly as
      `jax.core.eval_jaxpr` would.
 
@@ -122,16 +130,82 @@ def _broadcast_pack(pack: PlanePack, shape: Tuple[int, ...]) -> PlanePack:
 
 @dataclasses.dataclass
 class Region:
-    """A maximal run of eligible eqns fused into one Schedule."""
+    """A maximal run of eligible eqns fused into one Schedule.
+
+    `in_atoms` are the region program's inputs (external Vars + closed-over
+    ConstVals, in first-use order; scalar Literals are baked into the
+    trace). `donatable` indexes the in_atoms that are dead after the region
+    — safe for jit buffer donation. `key` is the structural cache key:
+    dataflow with canonicalized var numbering plus operand signatures, so
+    two structurally identical regions share one compiled program."""
 
     name: str
     ops: List[TracedOp]
     schedule: planner.Schedule
     unpack_vars: Tuple[Any, ...] = ()   # outvars a host consumer needs
+    in_atoms: Tuple[Any, ...] = ()
+    donatable: Tuple[int, ...] = ()
+    key: Tuple = ()
 
     @property
     def accesses(self) -> int:
         return self.schedule.accesses
+
+
+def _region_in_atoms(region: Region) -> Tuple[Any, ...]:
+    """External operands of a region, in first-use order: Vars produced
+    outside it plus ConstVals (deduped; Literals stay baked in)."""
+    produced = {v for op in region.ops for v in op.outvars
+                if not isinstance(v, jax.core.DropVar)}
+    atoms: List[Any] = []
+    seen: set = set()
+    for op in region.ops:
+        for a in op.invars:
+            if isinstance(a, jax.core.Var):
+                if a not in produced and a not in seen:
+                    seen.add(a)
+                    atoms.append(a)
+            elif isinstance(a, ConstVal):
+                if id(a) not in seen:
+                    seen.add(id(a))
+                    atoms.append(a)
+    return tuple(atoms)
+
+
+#: shared cache-key signature discipline (ONE definition, see macro.aval_sig)
+_aval_sig = macro.aval_sig
+
+
+def _region_key(region: Region) -> Tuple:
+    """Structural identity of a region's traced computation.
+
+    Vars (and ConstVals — their VALUES are program inputs, not baked
+    constants) are numbered by first appearance, Literal values are hashed
+    by content; together with op names and operand/result signatures this
+    determines the region body's trace exactly, so structurally identical
+    regions may share one compiled program."""
+    ids: Dict[int, int] = {}
+
+    def ref(v) -> int:
+        return ids.setdefault(id(v), len(ids))
+
+    parts: List[Tuple] = [
+        ("in",) + tuple((ref(a), _aval_sig(aval_of(a)))
+                        for a in region.in_atoms)]
+    for op in region.ops:
+        ins = []
+        for a in op.invars:
+            if isinstance(a, jax.core.Literal):
+                ins.append(("lit", np.asarray(a.val).tobytes(),
+                            _aval_sig(a.aval)))
+            else:
+                ins.append(("v", ref(a), _aval_sig(aval_of(a))))
+        outs = tuple(("drop",) if isinstance(v, jax.core.DropVar)
+                     else ("v", ref(v), _aval_sig(v.aval))
+                     for v in op.outvars)
+        parts.append((op.name, tuple(ins), outs))
+    parts.append(("out",) + tuple(ref(v) for v in region.unpack_vars))
+    return tuple(parts)
 
 
 def _read_host(env: Dict[Any, Any], atom):
@@ -174,10 +248,15 @@ class LoweredComputation:
                 # a run of purely-free eqns does no array work: host it
                 items.extend(("host", o) for o in buf)
             else:
+                # the schedule's macro name is deliberately NOT positional:
+                # it is part of the program-cache key, and structurally
+                # identical regions (e.g. repeated layers) must share one
+                # compiled program — Region.name keeps the position for
+                # display
                 region = Region(name=f"region{len(self.regions)}",
                                 ops=list(buf),
                                 schedule=planner.concat_schedules(
-                                    scheds, macro=f"region{len(self.regions)}"))
+                                    scheds, macro="region"))
                 self.regions.append(region)
                 items.append(("region", region))
             buf.clear()
@@ -203,11 +282,35 @@ class LoweredComputation:
             for op in ops:
                 acc.update(v for v in op.invars
                            if isinstance(v, jax.core.Var))
+        caller_owned = set(self.trace.closed.jaxpr.invars) \
+            | set(self.trace.closed.jaxpr.constvars)
+        # an _alias eqn (pjit-inlining passthrough) binds its outvar to the
+        # SAME jax.Array as its source — caller arguments and still-live
+        # vars included — so any var touching an alias is unsafe to donate
+        alias_tainted: set = set()
+        for op in self.trace.ops:
+            if op.name == "_alias":
+                alias_tainted.update(
+                    v for v in op.invars if isinstance(v, jax.core.Var))
+                alias_tainted.update(
+                    v for v in op.outvars
+                    if not isinstance(v, jax.core.DropVar))
         for i, (kind, payload) in enumerate(items):
             if kind == "region":
                 payload.unpack_vars = tuple(
                     v for op in payload.ops for v in op.outvars
                     if v in consumed_after[i])
+                payload.in_atoms = _region_in_atoms(payload)
+                # inputs dead after this region (and neither the caller's
+                # own buffers nor alias-shared ones) may be donated to the
+                # compiled region program
+                payload.donatable = tuple(
+                    j for j, a in enumerate(payload.in_atoms)
+                    if isinstance(a, jax.core.Var)
+                    and a not in caller_owned
+                    and a not in alias_tainted
+                    and a not in consumed_after[i])
+                payload.key = _region_key(payload)
 
     # -- execution ----------------------------------------------------------
     def execute(self, *args):
@@ -247,101 +350,137 @@ class LoweredComputation:
                 env[var] = val
 
     def _run_region(self, region: Region, env: Dict[Any, Any]) -> None:
-        chain = macro.ChainExecutor(region.schedule, backend=self.backend,
-                                    spec=self.spec, mesh=self.mesh)
-        penv: Dict[Any, PlanePack] = {}
+        """Execute a fused region as ONE jitted XLA program: gather the
+        region's input leaves from the host env, invoke (or compile) the
+        cached step program, land the unpacked outputs back in the env."""
+        leaves = tuple(_read_host(env, a) for a in region.in_atoms)
+        # donation only pays (and only passes silently) on accelerators;
+        # CPU jit ignores donations with a warning, so skip it there
+        donate = region.donatable \
+            if jax.default_backend() in ("gpu", "tpu") else ()
+        outs = macro.run_schedule_program(
+            region.schedule, self._region_body(region), leaves,
+            body_key=("region", region.key), backend=self.backend,
+            spec=self.spec, mesh=self.mesh, donate=donate)
+        for var, val in zip(region.unpack_vars, outs):
+            env[var] = val
 
-        def getp(atom, shape) -> PlanePack:
-            """Operand as a PlanePack of logical `shape` (region entry pack
-            for host values — each external var packed ONCE per region —
-            with scalar fanout staying in the packed domain)."""
-            if isinstance(atom, jax.core.Var) and atom in penv:
-                p = penv[atom]
-                if p.shape != tuple(shape):
-                    p = _broadcast_pack(p, tuple(shape))
-                return p
-            aval = aval_of(atom)
-            arr = jnp.asarray(_read_host(env, atom))
-            if arr.dtype == jnp.bool_:
-                arr = arr.astype(jnp.int32)
-            if tuple(arr.shape) != tuple(shape):
-                arr = jnp.broadcast_to(arr, tuple(shape))
-            p = PlanePack.pack(arr, dtype_bits(aval.dtype),
-                               signed=dtype_signed(aval.dtype))
-            if isinstance(atom, jax.core.Var) and \
-                    tuple(shape) == tuple(aval.shape):
-                penv[atom] = p        # entry pack: reused by later consumers
-            return p
+    def _region_body(self, region: Region):
+        """The traceable region computation `run_schedule_program` compiles:
+        the per-eqn execution loop over the program's shared cursor."""
 
-        def geti(atom) -> jax.Array:
-            """Operand as an integer array (the dot_general layout rebuild —
-            the one place a packed in-region value materializes)."""
-            if isinstance(atom, jax.core.Var) and atom in penv:
+        def body(cur, *leaves):
+            chain = macro.ChainExecutor.from_cursor(cur)
+            var_env: Dict[Any, Any] = {}
+            const_env: Dict[int, Any] = {}
+            for atom, leaf in zip(region.in_atoms, leaves):
+                if isinstance(atom, ConstVal):
+                    const_env[id(atom)] = leaf
+                else:
+                    var_env[atom] = leaf
+            penv: Dict[Any, PlanePack] = {}
+
+            def read(atom):
+                if isinstance(atom, jax.core.Literal):
+                    return jnp.asarray(atom.val, dtype=atom.aval.dtype)
+                if isinstance(atom, ConstVal):
+                    return const_env[id(atom)]
+                return var_env[atom]
+
+            def getp(atom, shape) -> PlanePack:
+                """Operand as a PlanePack of logical `shape` (region entry
+                pack for external values — each packed ONCE per region —
+                with scalar fanout staying in the packed domain)."""
+                if isinstance(atom, jax.core.Var) and atom in penv:
+                    p = penv[atom]
+                    if p.shape != tuple(shape):
+                        p = _broadcast_pack(p, tuple(shape))
+                    return p
                 aval = aval_of(atom)
-                return penv[atom].unpack().astype(aval.dtype)
-            return jnp.asarray(_read_host(env, atom))
+                arr = jnp.asarray(read(atom))
+                if arr.dtype == jnp.bool_:
+                    arr = arr.astype(jnp.int32)
+                if tuple(arr.shape) != tuple(shape):
+                    arr = jnp.broadcast_to(arr, tuple(shape))
+                p = PlanePack.pack(arr, dtype_bits(aval.dtype),
+                                   signed=dtype_signed(aval.dtype))
+                if isinstance(atom, jax.core.Var) and \
+                        tuple(shape) == tuple(aval.shape):
+                    penv[atom] = p    # entry pack: reused by later consumers
+                return p
 
-        for op in region.ops:
-            out_aval = aval_of(op.outvars[0])
-            shape = tuple(out_aval.shape)
-            name = op.name
-            if name in ("add", "sub", "and", "or", "xor"):
-                pa, pb = getp(op.invars[0], shape), getp(op.invars[1], shape)
-                res = chain.execute(pa, pb, (name,))[name]
-            elif name in CMP_PRIMS:
-                base, complement = CMP_PRIMS[name]
-                pa, pb = getp(op.invars[0], shape), getp(op.invars[1], shape)
-                res = chain.execute(pa, pb, (base,))[base]
-                if complement:
-                    res = _complement(res)
-            elif name == "min":
-                res = chain.minimum(getp(op.invars[0], shape),
-                                    getp(op.invars[1], shape))
-            elif name == "max":
-                res = chain.maximum(getp(op.invars[0], shape),
-                                    getp(op.invars[1], shape))
-            elif name == "neg":
-                res = chain.neg(getp(op.invars[0], shape))
-            elif name == "abs":
-                res = chain.abs_(getp(op.invars[0], shape))
-            elif name == "mul":
-                res = chain.multiply(getp(op.invars[0], shape),
-                                     getp(op.invars[1], shape))
-            elif name == "population_count":
-                res = chain.popcount(getp(op.invars[0], shape))
-            elif name == "reduce_sum":
-                src_shape = tuple(aval_of(op.invars[0]).shape)
-                res = chain.reduce_sum(getp(op.invars[0], src_shape))
-            elif name == "dot_general":
-                res = chain.matmul(geti(op.invars[0]), geti(op.invars[1]),
-                                   op.n_bits,
-                                   signed=dtype_signed(
-                                       aval_of(op.invars[0]).dtype))
-            elif name == "convert_element_type":
-                src_shape = tuple(aval_of(op.invars[0]).shape)
-                res = getp(op.invars[0], src_shape)
-            elif name == "reshape":
-                src_shape = tuple(aval_of(op.invars[0]).shape)
-                res = getp(op.invars[0], src_shape)
-            elif name == "not":
-                res = _complement(getp(op.invars[0], shape))
-            elif name == "select_n":
-                pred = getp(op.invars[0], shape)
-                x = getp(op.invars[1], shape)
-                y = getp(op.invars[2], shape)
-                res = macro.select(pred, y, x)   # pred ? cases[1] : cases[0]
-            elif name == "broadcast_in_dim":
-                src_shape = tuple(aval_of(op.invars[0]).shape)
-                res = _broadcast_pack(getp(op.invars[0], src_shape), shape)
-            else:                                 # pragma: no cover
-                raise CimOpError(f"region executor missing op {name!r}")
-            if not isinstance(op.outvars[0], jax.core.DropVar):
-                penv[op.outvars[0]] = _finish(res, out_aval)
-        chain.finish()
+            def geti(atom) -> jax.Array:
+                """Operand as an integer array (the dot_general layout
+                rebuild — the one declared in-region materialization)."""
+                if isinstance(atom, jax.core.Var) and atom in penv:
+                    aval = aval_of(atom)
+                    return penv[atom].unpack().astype(aval.dtype)
+                return jnp.asarray(read(atom))
 
-        for var in region.unpack_vars:
-            aval = aval_of(var)
-            env[var] = penv[var].unpack().astype(aval.dtype)
+            for op in region.ops:
+                out_aval = aval_of(op.outvars[0])
+                shape = tuple(out_aval.shape)
+                name = op.name
+                if name in ("add", "sub", "and", "or", "xor"):
+                    pa = getp(op.invars[0], shape)
+                    pb = getp(op.invars[1], shape)
+                    res = chain.execute(pa, pb, (name,))[name]
+                elif name in CMP_PRIMS:
+                    base, complement = CMP_PRIMS[name]
+                    pa = getp(op.invars[0], shape)
+                    pb = getp(op.invars[1], shape)
+                    res = chain.execute(pa, pb, (base,))[base]
+                    if complement:
+                        res = _complement(res)
+                elif name == "min":
+                    res = chain.minimum(getp(op.invars[0], shape),
+                                        getp(op.invars[1], shape))
+                elif name == "max":
+                    res = chain.maximum(getp(op.invars[0], shape),
+                                        getp(op.invars[1], shape))
+                elif name == "neg":
+                    res = chain.neg(getp(op.invars[0], shape))
+                elif name == "abs":
+                    res = chain.abs_(getp(op.invars[0], shape))
+                elif name == "mul":
+                    res = chain.multiply(getp(op.invars[0], shape),
+                                         getp(op.invars[1], shape))
+                elif name == "population_count":
+                    res = chain.popcount(getp(op.invars[0], shape))
+                elif name == "reduce_sum":
+                    src_shape = tuple(aval_of(op.invars[0]).shape)
+                    res = chain.reduce_sum(getp(op.invars[0], src_shape))
+                elif name == "dot_general":
+                    res = chain.matmul(geti(op.invars[0]),
+                                       geti(op.invars[1]), op.n_bits,
+                                       signed=dtype_signed(
+                                           aval_of(op.invars[0]).dtype))
+                elif name == "convert_element_type":
+                    src_shape = tuple(aval_of(op.invars[0]).shape)
+                    res = getp(op.invars[0], src_shape)
+                elif name == "reshape":
+                    src_shape = tuple(aval_of(op.invars[0]).shape)
+                    res = getp(op.invars[0], src_shape)
+                elif name == "not":
+                    res = _complement(getp(op.invars[0], shape))
+                elif name == "select_n":
+                    pred = getp(op.invars[0], shape)
+                    x = getp(op.invars[1], shape)
+                    y = getp(op.invars[2], shape)
+                    res = macro.select(pred, y, x)  # pred ? cases[1] : cases[0]
+                elif name == "broadcast_in_dim":
+                    src_shape = tuple(aval_of(op.invars[0]).shape)
+                    res = _broadcast_pack(getp(op.invars[0], src_shape),
+                                          shape)
+                else:                             # pragma: no cover
+                    raise CimOpError(f"region executor missing op {name!r}")
+                if not isinstance(op.outvars[0], jax.core.DropVar):
+                    penv[op.outvars[0]] = _finish(res, out_aval)
+
+            return tuple(penv[var].unpack().astype(aval_of(var).dtype)
+                         for var in region.unpack_vars)
+
+        return body
 
     # -- reporting ----------------------------------------------------------
     @property

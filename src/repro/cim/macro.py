@@ -1,13 +1,33 @@
 """Macro-op executors: multi-access CiM arithmetic over the single-access
-engine.
+engine, compiled to ONE jitted XLA program per schedule.
 
 Every macro here executes a `planner.Schedule` through a cursor that allows
-exactly the planned accesses (same order, same op-sets) and nothing else —
-each cursor step is one `engine.execute` call, so the accounting ledger is
-charged precisely `schedule.accesses` times per macro invocation. Operands,
-partial products, accumulators and tree levels all stay in the PlanePack
-packed domain; the only integer codec entries are the caller's own pack()
-at entry and unpack() at exit.
+exactly the planned accesses (same order, same op-sets) and nothing else.
+The cursor has two modes:
+
+  * eager (charges=None): each step is one `engine.execute` /
+    `dispatch.execute_tiled` call charging the ledger directly — tens of
+    host round trips per macro, kept for direct cursor users and tests.
+  * traced (charges=list): each step is the side-effect-free
+    `execute_traced` form and appends its ledger charge to a
+    charge-from-plan record instead of mutating anything.
+
+`run_schedule_program` uses the traced mode to compile a whole schedule —
+every access plus all the packed-domain peripherals between them (plane
+shifts, truncations, selects, row-buffer strides) — into a single `jax.jit`
+program, cached in the dispatch layer's bounded LRU keyed on schedule
+structure. A warm macro is ONE XLA dispatch; the recorded PlannedCharges
+replay into the ledger per invocation, so `ledger accesses ==
+schedule.accesses` still holds by construction. ADRA step sequences are
+width-heterogeneous (bit growth between accesses: partial products widen,
+tree levels deepen), so the step program is an unrolled trace rather than a
+`lax.scan` — XLA pipelines the unrolled chain and aliases the accumulator
+buffers internally; scan would require shape-stable carries no ADRA
+schedule has.
+
+Operands, partial products, accumulators and tree levels all stay in the
+PlanePack packed domain; the only integer codec entries are the caller's
+own pack() at entry and unpack() at exit.
 
 Macros:
 
@@ -31,8 +51,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import dispatch, engine, opset, planner
-from .accounting import LEDGER
+from .accounting import LEDGER, PlannedCharges
 from .array import ArraySpec
+from .backends import get_backend
 from .opset import CimOpError
 from .planepack import PlanePack
 
@@ -48,16 +69,23 @@ class ScheduleCursor:
     bank activations and the guarantee becomes ledger accesses ==
     schedule.placed_accesses. A mesh additionally spreads the tiles over
     its "data" axis via shard_map.
+
+    With `charges` (a list) the cursor is in TRACED mode: accesses run
+    through the side-effect-free `execute_traced` forms, the ledger is
+    never touched, and every planned charge is appended to `charges` — the
+    charge-from-plan record `run_schedule_program` replays per invocation
+    of the compiled step program.
     """
 
     def __init__(self, schedule: planner.Schedule,
                  backend: Optional[str] = None,
                  spec: Optional[ArraySpec] = None,
-                 mesh=None):
+                 mesh=None, charges: Optional[list] = None):
         self.schedule = schedule
         self.backend = backend
         self.spec = spec
         self.mesh = mesh
+        self.charges = charges
         self._i = 0
 
     def step(self) -> planner.Step:
@@ -75,10 +103,26 @@ class ScheduleCursor:
                 f"{self.schedule.macro}: access {self._i} executes {ops!r} "
                 f"but the plan says {step.ops!r}")
         self._i += 1
+        if self.charges is not None:
+            if self.spec is None:
+                return engine.execute_traced(a, b, step.ops,
+                                             backend=self.backend,
+                                             charges=self.charges)
+            return dispatch.execute_tiled_traced(
+                a, b, step.ops, spec=self.spec, backend=self.backend,
+                mesh=self.mesh, charges=self.charges)
         if self.spec is None:
             return engine.execute(a, b, step.ops, backend=self.backend)
         return dispatch.execute_tiled(a, b, step.ops, spec=self.spec,
                                       backend=self.backend, mesh=self.mesh)
+
+    def charge_reduction(self, words32: float) -> None:
+        """Inter-bank reduction traffic: charged directly in eager mode,
+        recorded into the charge-from-plan record in traced mode."""
+        if self.charges is not None:
+            self.charges.append(("reduction", float(words32)))
+        else:
+            LEDGER.charge_reduction(words32)
 
     def remaining(self) -> Tuple[planner.Step, ...]:
         return self.schedule.steps[self._i:]
@@ -90,15 +134,117 @@ class ScheduleCursor:
                 f"{self.schedule.accesses} planned accesses")
 
 
+# ---------------------------------------------------------------------------
+# whole-schedule step programs: one jitted XLA dispatch per macro/region
+# ---------------------------------------------------------------------------
 
-def _cursor(sched: planner.Schedule, n_words: int,
-            backend: Optional[str], spec: Optional[ArraySpec],
-            mesh) -> ScheduleCursor:
-    """Place a schedule on the banked geometry (when given) and open its
-    cursor — the single spot where placement meets execution."""
-    if spec is not None:
-        sched = sched.placed(spec, n_words)
-    return ScheduleCursor(sched, backend, spec=spec, mesh=mesh)
+
+class CompiledSchedule:
+    """A jitted whole-schedule program plus its charge-from-plan record.
+
+    Calling it replays the recorded ledger charges (computed once, at trace
+    time, from the cursor-checked plan) and invokes the compiled program —
+    ONE XLA dispatch for the entire schedule."""
+
+    __slots__ = ("fn", "charges")
+
+    def __init__(self, fn, charges: PlannedCharges):
+        self.fn = fn
+        self.charges = charges
+
+    def __call__(self, *leaves):
+        # invoke first, account after: a failed invocation must not leave
+        # the ledger charged (or the dispatch counter bumped) for an
+        # execution that never happened
+        out = self.fn(*leaves)
+        self.charges.replay()
+        dispatch.count_dispatch()
+        return out
+
+
+def aval_sig(aval) -> Tuple:
+    """Cache-key signature of one abstract value: shape, dtype and
+    weak_type — anything jit would retrace on must be in OUR program-cache
+    keys, or a cache hit could replay charges recorded from a different
+    trace. The ONE definition of that discipline; the lowering compiler's
+    region keys use it too."""
+    return (tuple(aval.shape), str(aval.dtype),
+            bool(getattr(aval, "weak_type", False)))
+
+
+def _leaf_sig(x):
+    """aval_sig of a concrete (or traced) input leaf."""
+    try:
+        return aval_sig(jax.core.get_aval(x))
+    except Exception:
+        return aval_sig(jnp.asarray(x))
+
+
+def run_schedule_program(schedule: planner.Schedule, body, operands,
+                         body_key=(), backend: Optional[str] = None,
+                         spec: Optional[ArraySpec] = None, mesh=None,
+                         donate: Tuple[int, ...] = ()):
+    """Execute `body(cursor, *operands)` as ONE jitted XLA program.
+
+    The whole schedule — every planned access plus the zero-cost
+    packed-domain peripherals between them — is traced once into a single
+    `jax.jit` program (unrolled: ADRA step sequences are width-
+    heterogeneous, see module docstring) and cached in the dispatch layer's
+    bounded LRU, keyed on the schedule structure, the body identity
+    (`body_key`), operand signatures, backend, banked geometry and mesh. A
+    repeated macro or fused region therefore hits end-to-end: zero retrace,
+    one dispatch, and the PlannedCharges recorded at trace time replayed
+    into the ledger — accesses == schedule.accesses, unbanked or banked,
+    exactly as the eager cursor charged.
+
+    `donate` names operand leaf positions whose buffers the program may
+    reuse for its accumulator chain (jit donate_argnums); callers must only
+    donate buffers that are dead after the call.
+
+    Residency note: a cached program keeps its body closure (for a region:
+    the Region and any closed-over ConstVal constants) alive until LRU
+    eviction — that is what makes eviction-then-recompile possible. The
+    bounded capacity (set_schedule_cache_capacity / REPRO_CIM_CACHE_CAPACITY)
+    is the memory ceiling; long-lived servers that reload weights should
+    size it accordingly.
+    """
+    bk_name = get_backend(backend).name
+    leaves, treedef = jax.tree_util.tree_flatten(operands)
+    key = ("step-program", schedule, tuple(body_key), treedef,
+           tuple(_leaf_sig(x) for x in leaves), bk_name, spec, mesh,
+           tuple(donate))
+    prog = dispatch.program_cache_get(key)
+    if prog is not None:
+        return prog(*leaves)
+
+    charges: list = []
+
+    def fn(*flat):
+        args = jax.tree_util.tree_unflatten(treedef, list(flat))
+        cur = ScheduleCursor(schedule, bk_name, spec=spec, mesh=mesh,
+                             charges=charges)
+        out = body(cur, *args)
+        cur.finish()
+        return out
+
+    jitted = jax.jit(fn, donate_argnums=tuple(donate))
+    out = jitted(*leaves)       # first call traces: `charges` fills here
+    planned = PlannedCharges(tuple(charges))
+    if planned.accesses != schedule.accesses:   # pragma: no cover
+        raise CimOpError(
+            f"{schedule.macro}: traced {planned.accesses} accesses but the "
+            f"plan has {schedule.accesses}")
+    dispatch.program_cache_put(key, CompiledSchedule(jitted, planned))
+    planned.replay()
+    dispatch.count_dispatch()
+    return out
+
+
+def _place(sched: planner.Schedule, spec: Optional[ArraySpec],
+           n_words: int) -> planner.Schedule:
+    """Pin a schedule to the banked geometry (when given) — the single spot
+    where placement meets compilation."""
+    return sched.placed(spec, n_words) if spec is not None else sched
 
 
 # ---------------------------------------------------------------------------
@@ -167,14 +313,15 @@ def multiply(a: PlanePack, b: PlanePack,
              backend: Optional[str] = None,
              spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
     """Exact product, (n_a + n_b)-plane result, 2*n_b - 1 accesses (times
-    the tile count when placed on a banked `spec`)."""
+    the tile count when placed on a banked `spec`) — compiled to one XLA
+    dispatch."""
     if a.shape != b.shape:
         raise CimOpError(f"operand shapes differ: {a.shape} vs {b.shape}")
-    sched = planner.plan_multiply(a.n_bits, b.n_bits, signed_b=b.signed)
-    cur = _cursor(sched, a.n_words, backend, spec, mesh)
-    out = _multiply_with(cur, a, b)
-    cur.finish()
-    return out
+    sched = _place(planner.plan_multiply(a.n_bits, b.n_bits,
+                                         signed_b=b.signed), spec, a.n_words)
+    return run_schedule_program(sched, _multiply_with, (a, b),
+                                body_key=("multiply",), backend=backend,
+                                spec=spec, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -210,41 +357,37 @@ def abs_(a: PlanePack, backend: Optional[str] = None,
          spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
     """|a| in one access: (0 - a, 0 < a) together, then select a vs -a.
     Result is (n+1)-plane so abs(INT_MIN) is exact."""
-    cur = _cursor(planner.plan_abs(a.n_bits), a.n_words, backend, spec,
-                  mesh)
-    out = _abs_with(cur, a)
-    cur.finish()
-    return out
+    sched = _place(planner.plan_abs(a.n_bits), spec, a.n_words)
+    return run_schedule_program(sched, _abs_with, (a,), body_key=("abs",),
+                                backend=backend, spec=spec, mesh=mesh)
 
 
 def relu(a: PlanePack, backend: Optional[str] = None,
          spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
     """max(a, 0) in one access: the a > 0 predicate gates the writeback."""
-    cur = _cursor(planner.plan_relu(a.n_bits), a.n_words, backend, spec,
-                  mesh)
-    out = _relu_with(cur, a)
-    cur.finish()
-    return out
+    sched = _place(planner.plan_relu(a.n_bits), spec, a.n_words)
+    return run_schedule_program(sched, _relu_with, (a,), body_key=("relu",),
+                                backend=backend, spec=spec, mesh=mesh)
 
 
 def minimum(a: PlanePack, b: PlanePack,
             backend: Optional[str] = None,
             spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
-    cur = _cursor(planner.plan_minimum(max(a.n_bits, b.n_bits)),
-                  a.n_words, backend, spec, mesh)
-    out = _minimum_with(cur, a, b)
-    cur.finish()
-    return out
+    sched = _place(planner.plan_minimum(max(a.n_bits, b.n_bits)), spec,
+                   a.n_words)
+    return run_schedule_program(sched, _minimum_with, (a, b),
+                                body_key=("minimum",), backend=backend,
+                                spec=spec, mesh=mesh)
 
 
 def maximum(a: PlanePack, b: PlanePack,
             backend: Optional[str] = None,
             spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
-    cur = _cursor(planner.plan_maximum(max(a.n_bits, b.n_bits)),
-                  a.n_words, backend, spec, mesh)
-    out = _maximum_with(cur, a, b)
-    cur.finish()
-    return out
+    sched = _place(planner.plan_maximum(max(a.n_bits, b.n_bits)), spec,
+                   a.n_words)
+    return run_schedule_program(sched, _maximum_with, (a, b),
+                                body_key=("maximum",), backend=backend,
+                                spec=spec, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -269,11 +412,10 @@ def popcount(a: PlanePack, backend: Optional[str] = None,
              spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
     """Set bits of each word's n-bit two's-complement pattern: pairwise
     plane tree, n - 1 add accesses."""
-    cur = _cursor(planner.plan_popcount(a.n_bits), a.n_words, backend,
-                  spec, mesh)
-    out = _popcount_with(cur, a)
-    cur.finish()
-    return out
+    sched = _place(planner.plan_popcount(a.n_bits), spec, a.n_words)
+    return run_schedule_program(sched, _popcount_with, (a,),
+                                body_key=("popcount",), backend=backend,
+                                spec=spec, mesh=mesh)
 
 
 def _reduce_with(cur: ScheduleCursor, acc: PlanePack,
@@ -301,23 +443,28 @@ def _reduce_with(cur: ScheduleCursor, acc: PlanePack,
             plan = cur.spec.plan(acc.n_words)
             if plan.n_tiles > 1:
                 frac = min(1.0, step.stride / plan.tile_words)
-                LEDGER.charge_reduction(
+                cur.charge_reduction(
                     acc.n_words * frac * acc.n_bits / 32.0)
         shifted = acc.shift_elements(step.stride)
         acc = cur.execute(acc, shifted, ("add",))["add"]
     return acc
 
 
+def _reduce_sum_body(cur: ScheduleCursor, a: PlanePack) -> PlanePack:
+    acc = _reduce_with(cur, a)
+    return PlanePack(planes=acc.planes, n_bits=acc.n_bits,
+                     signed=acc.signed, shape=())
+
+
 def reduce_sum(a: PlanePack, backend: Optional[str] = None,
                spec: Optional[ArraySpec] = None, mesh=None) -> PlanePack:
     """Sum of ALL logical elements, ceil(log2(n_words)) accesses; returns a
     scalar-shaped pack (element 0 of the tree)."""
-    sched = planner.plan_reduce_sum(a.n_words, stride=1, n_bits=a.n_bits)
-    cur = _cursor(sched, a.n_words, backend, spec, mesh)
-    acc = _reduce_with(cur, a)
-    cur.finish()
-    return PlanePack(planes=acc.planes, n_bits=acc.n_bits,
-                     signed=acc.signed, shape=())
+    sched = _place(planner.plan_reduce_sum(a.n_words, stride=1,
+                                           n_bits=a.n_bits), spec, a.n_words)
+    return run_schedule_program(sched, _reduce_sum_body, (a,),
+                                body_key=("reduce_sum",), backend=backend,
+                                spec=spec, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -372,11 +519,18 @@ def matmul(a: jax.Array, b: jax.Array, n_bits: int = 8,
     m, k = a.shape
     n = b.shape[1]
     k_pad = 1 << planner._log2_ceil(k)
-    sched = planner.plan_matmul(k, n, n_bits=n_bits, signed=True)
-    cur = _cursor(sched, m * k_pad * n, backend, spec, mesh)
-    out = _matmul_with(cur, a, b, n_bits)
-    cur.finish()
-    return out.unpack()
+    sched = _place(planner.plan_matmul(k, n, n_bits=n_bits, signed=True),
+                   spec, m * k_pad * n)
+
+    def body(cur, a_, b_):
+        # the broadcast-layout build, the entry packs and the exit unpack
+        # all live INSIDE the step program — the whole contraction is one
+        # XLA dispatch end to end
+        return _matmul_with(cur, a_, b_, n_bits).unpack()
+
+    return run_schedule_program(sched, body, (a, b),
+                                body_key=("matmul", n_bits),
+                                backend=backend, spec=spec, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -393,13 +547,24 @@ class ChainExecutor:
 
     This is the execution half of the lowering compiler's region fusion
     (repro.cim.lower): lower() concatenates per-eqn schedules at trace
-    time; the hybrid callable opens a ChainExecutor per region at run time.
+    time; the hybrid callable compiles each region into one step program
+    (run_schedule_program) whose body drives a ChainExecutor over the
+    program's traced cursor (`from_cursor`).
     """
 
     def __init__(self, schedule: planner.Schedule,
                  backend: Optional[str] = None,
-                 spec: Optional[ArraySpec] = None, mesh=None):
-        self.cursor = ScheduleCursor(schedule, backend, spec=spec, mesh=mesh)
+                 spec: Optional[ArraySpec] = None, mesh=None,
+                 charges: Optional[list] = None):
+        self.cursor = ScheduleCursor(schedule, backend, spec=spec, mesh=mesh,
+                                     charges=charges)
+
+    @classmethod
+    def from_cursor(cls, cursor: ScheduleCursor) -> "ChainExecutor":
+        """Wrap an already-open cursor (the step program's traced one)."""
+        self = cls.__new__(cls)
+        self.cursor = cursor
+        return self
 
     # -- single-access ops (one planned step each) --------------------------
     def execute(self, a: PlanePack, b: PlanePack,

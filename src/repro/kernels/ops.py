@@ -102,7 +102,10 @@ def cim_matmul(a: jax.Array, b: jax.Array, n_bits: int = 8,
     a [M, K], b [K, N] with entries representable in n_bits signed. The
     LOGICAL access count is (2*n_bits - 1) + ceil(log2 K) — independent of
     M and N; placed on a banked `spec`, each access becomes one activation
-    per operand tile and the schedule carries its placement.
+    per operand tile and the schedule carries its placement. The whole
+    schedule executes as ONE jitted XLA program (repro.cim.macro.
+    run_schedule_program): warm calls are a single dispatch with ledger
+    charges replayed from the plan.
     """
     return macro.matmul(a, b, n_bits=n_bits,
                         backend=_resolve_backend(interpret, backend),

@@ -44,7 +44,8 @@ def _print_cim_report(n_requests: int) -> None:
           f"(current sensing @1024^2)")
     cs = cache_stats()
     print(f"  schedule cache: {cs['hits']} hits / {cs['misses']} misses / "
-          f"{cs['evictions']} evictions (capacity {cs['capacity']})")
+          f"{cs['evictions']} evictions (capacity {cs['capacity']}), "
+          f"{cs['dispatches']} jitted dispatches (one per warm macro/region)")
 
 
 def main():

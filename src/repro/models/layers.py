@@ -227,10 +227,11 @@ def cim_linear(x: jax.Array, w: jax.Array, n_bits: int = 8,
     quantized-linear function is staged once per argument signature and its
     integer contraction executes through the planner's access schedules
     (banked/tiled when `spec` is given) while quantize/rescale run on the
-    host — bit-exact with the un-lowered function. This is a functional-
-    simulation path for model-scale integer offload studies, not a fast
-    path: the packed broadcast layout materializes M*K*N words, so use it
-    on reduced configs / layer slices.
+    host — bit-exact with the un-lowered function. Each fused region is
+    ONE compiled XLA program (warm calls: one dispatch per region, zero
+    retrace). Still a functional-simulation path for model-scale integer
+    offload studies, not a fast path: the packed broadcast layout
+    materializes M*K*N words, so use it on reduced configs / layer slices.
     """
     return _lowered_linear(n_bits, backend, spec, mesh)(x, w)
 
