@@ -1,28 +1,35 @@
-"""CI perf-regression gate over BENCH_kernel.json.
+"""CI perf-regression gate over benchmark JSON (kernel bench, serve bench).
 
 Compares a freshly produced benchmark JSON against the committed baseline
-(benchmarks/baselines/BENCH_kernel.baseline.json) and FAILS (exit 1) when:
+(benchmarks/baselines/*.baseline.json, picked with --baseline) and FAILS
+(exit 1) when:
 
   * any traffic/efficiency ratio regresses more than --tolerance (default
     10%) below its baseline value — keys named `ratio` or `*_ratio*`, plus
     nested {"ratio": ...} traffic dicts;
   * any access count GROWS — keys named `accesses`, `ledger_accesses`,
-    `banked_accesses` or `waves`: the planner/dispatcher access model is
-    exact, so any growth is a real cost regression, not noise;
+    `banked_accesses`, `waves`, the serve engine's `load_accesses` /
+    `total_accesses` and their `*_per_token` forms: the planner/dispatcher
+    charge model is exact and the serve bench's request schedule is
+    deterministic (arrival interval 0), so any growth is a real cost
+    regression, not noise;
   * the jitted-dispatch count of a warm macro/region (`dispatches`) GROWS —
     the whole-schedule compiler's guarantee is ONE dispatch per schedule,
     and the dispatch count is the deterministic walltime proxy;
+  * a latency key (`p99_ms`) exceeds baseline * --latency-factor (default
+    10x) — a deliberately loose, machine-tolerant smoke bound that only
+    catches order-of-magnitude serving collapses;
   * a gated baseline key disappeared from the current run (a silently
     dropped benchmark section must not pass the gate).
 
-Wall-times and machine-dependent metrics are deliberately NOT gated; the
-gated quantities are analytic (byte models, schedule lengths, tile counts)
-and therefore deterministic across hosts.
+Other wall-times and machine-dependent metrics are deliberately NOT gated;
+the tightly gated quantities are analytic (byte models, schedule lengths,
+tile counts) and therefore deterministic across hosts.
 
 Usage:
     python benchmarks/check_regression.py [BENCH_kernel.json]
         [--baseline benchmarks/baselines/BENCH_kernel.baseline.json]
-        [--tolerance 0.10]
+        [--tolerance 0.10] [--latency-factor 10.0]
 """
 from __future__ import annotations
 
@@ -32,14 +39,20 @@ import sys
 
 #: key names gated as never-grow counters (exact, deterministic)
 COUNTER_KEYS = ("accesses", "ledger_accesses", "banked_accesses", "waves",
-                "dispatches")
+                "dispatches", "load_accesses", "total_accesses",
+                "accesses_per_token", "load_accesses_per_token",
+                "total_accesses_per_token")
+
+#: wall-clock latency keys, gated only against baseline * --latency-factor
+LATENCY_KEYS = ("p99_ms",)
 
 
 def _is_ratio_key(key: str) -> bool:
     return "ratio" in key
 
 
-def compare(baseline, current, tolerance: float, path: str = ""):
+def compare(baseline, current, tolerance: float, path: str = "",
+            latency_factor: float = 10.0):
     """Yield (path, kind, baseline, current) problem tuples."""
     if isinstance(baseline, dict):
         if not isinstance(current, dict):
@@ -48,7 +61,8 @@ def compare(baseline, current, tolerance: float, path: str = ""):
         for key, bval in baseline.items():
             sub = f"{path}.{key}" if path else key
             if key in current:
-                yield from compare(bval, current[key], tolerance, sub)
+                yield from compare(bval, current[key], tolerance, sub,
+                                   latency_factor)
             elif _gated(key, bval):
                 yield (sub, "missing", bval, None)
         return
@@ -62,13 +76,16 @@ def compare(baseline, current, tolerance: float, path: str = ""):
         yield (path, "ratio-regressed", baseline, current)
     if key in COUNTER_KEYS and current > baseline:
         yield (path, "count-grew", baseline, current)
+    if key in LATENCY_KEYS and baseline > 0 \
+            and current > baseline * latency_factor:
+        yield (path, "latency-blew-up", baseline, current)
 
 
 def _gated(key: str, value) -> bool:
     """Does this baseline subtree contain anything the gate checks?"""
     if isinstance(value, dict):
         return any(_gated(k, v) for k, v in value.items())
-    return _is_ratio_key(key) or key in COUNTER_KEYS
+    return _is_ratio_key(key) or key in COUNTER_KEYS or key in LATENCY_KEYS
 
 
 def main(argv=None) -> int:
@@ -79,6 +96,9 @@ def main(argv=None) -> int:
                     default="benchmarks/baselines/BENCH_kernel.baseline.json")
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed fractional ratio drop (default 0.10)")
+    ap.add_argument("--latency-factor", type=float, default=10.0,
+                    help="p99 latency smoke bound: fail above "
+                         "baseline * factor (default 10.0)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -86,7 +106,8 @@ def main(argv=None) -> int:
     with open(args.current) as f:
         current = json.load(f)
 
-    problems = list(compare(baseline, current, args.tolerance))
+    problems = list(compare(baseline, current, args.tolerance,
+                            latency_factor=args.latency_factor))
     checked = sum(_count_gated(k, v) for k, v in baseline.items())
     if problems:
         print(f"PERF REGRESSION: {len(problems)} of {checked} gated metrics "
@@ -103,7 +124,8 @@ def main(argv=None) -> int:
 def _count_gated(key: str, value) -> int:
     if isinstance(value, dict):
         return sum(_count_gated(k, v) for k, v in value.items())
-    return int(_is_ratio_key(key) or key in COUNTER_KEYS)
+    return int(_is_ratio_key(key) or key in COUNTER_KEYS
+               or key in LATENCY_KEYS)
 
 
 if __name__ == "__main__":

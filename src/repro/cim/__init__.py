@@ -52,7 +52,15 @@ from . import (  # noqa: F401
     trace as trace_mod,
 )
 from .accounting import LEDGER, Ledger, ledger, project_savings  # noqa: F401
-from .array import DEFAULT_SPEC, ArraySpec, TilePlan  # noqa: F401
+from .array import (  # noqa: F401
+    DEFAULT_SPEC,
+    ArraySpec,
+    ResidentSet,
+    TilePlan,
+    clear_resident,
+    resident_set,
+    resident_stats,
+)
 from .dispatch import (  # noqa: F401
     cache_stats,
     clear_schedule_cache,
@@ -93,6 +101,7 @@ from .macro import (  # noqa: F401
     abs_,
     dot,
     matmul,
+    matmul_rhs_pack,
     maximum,
     minimum,
     multiply,

@@ -48,6 +48,15 @@ class Ledger:
     activated_words32  : 32-bit-word slots ACTIVATED (incl. the idle columns
                          of partially-filled tiles) — >= words32.
     inter_bank_words32 : words crossing banks in reduction steps.
+    load_accesses      : operand-load (row-write) accesses: a STREAMED
+                         operand must be driven into the array rows before
+                         an access can compute over it — one load per
+                         operand entry pack (per tile when placed). Resident
+                         operands skip this charge; that skip is the paper's
+                         stored-operand assumption made measurable.
+    load_words32       : word-equivalents written by operand loads.
+    resident_reuses    : resident-operand reuses (entry pack skipped).
+    resident_words32   : word-equivalents those reuses did NOT re-write.
     """
 
     accesses: int = 0
@@ -57,7 +66,18 @@ class Ledger:
         default_factory=dict)
     activated_words32: float = 0.0
     inter_bank_words32: float = 0.0
+    load_accesses: int = 0
+    load_words32: float = 0.0
+    resident_reuses: int = 0
+    resident_words32: float = 0.0
     enabled: bool = True
+
+    @property
+    def total_accesses(self) -> int:
+        """Compute accesses + streamed operand-load accesses — the number a
+        resident-operand execution strictly shrinks vs the repack path
+        (compute accesses alone are identical by construction)."""
+        return self.accesses + self.load_accesses
 
     def charge(self, ops: Tuple[str, ...], n_bits: int, n_words: int,
                accesses: int = 1) -> None:
@@ -95,6 +115,24 @@ class Ledger:
         if not self.enabled:
             return
         self.inter_bank_words32 += words32
+
+    def charge_load(self, n_bits: int, n_words: int,
+                    n_tiles: int = 1) -> None:
+        """Row-writes driving one STREAMED operand entry pack into the
+        array — one load access per tile it lands on. Pins charge this
+        exactly once; streamed operands pay it every call."""
+        if not self.enabled:
+            return
+        self.load_accesses += n_tiles
+        self.load_words32 += n_words * n_bits / 32.0
+
+    def charge_resident_reuse(self, n_bits: int, n_words: int) -> None:
+        """One resident-operand reuse: the entry pack (and its load
+        accesses) was skipped because the operand already lives in rows."""
+        if not self.enabled:
+            return
+        self.resident_reuses += 1
+        self.resident_words32 += n_words * n_bits / 32.0
 
     def reset(self) -> None:
         """Restore every counter to its dataclass default.
@@ -184,7 +222,9 @@ class PlannedCharges:
     access appends one entry — ("access", ops, n_bits, n_words) for the
     unbanked engine, ("banked", ops, n_bits, n_words, plan, n_devices) for
     the tiling dispatcher, ("reduction", words32) for inter-bank reduction
-    traffic — and `replay()` applies the whole record to the ledger on every
+    traffic, ("load", n_bits, n_words, n_tiles) for streamed operand
+    row-writes and ("resident", n_bits, n_words) for resident-operand
+    reuses — and `replay()` applies the whole record to the ledger on every
     invocation of the compiled program. Because the ScheduleCursor refuses
     any access its plan does not contain, the record provably matches both
     the plan and the execution: accesses == schedule.accesses still holds by
@@ -211,6 +251,12 @@ class PlannedCharges:
                                   n_devices=n_devices)
             elif kind == "reduction":
                 led.charge_reduction(entry[1])
+            elif kind == "load":
+                _, n_bits, n_words, n_tiles = entry
+                led.charge_load(n_bits, n_words, n_tiles=n_tiles)
+            elif kind == "resident":
+                _, n_bits, n_words = entry
+                led.charge_resident_reuse(n_bits, n_words)
             else:                              # pragma: no cover
                 raise ValueError(f"unknown charge entry {kind!r}")
 

@@ -1,4 +1,4 @@
-"""Banked CiM array substrate: physical geometry + tile placement.
+"""Banked CiM array substrate: physical geometry, tile placement, residency.
 
 The engine (repro.cim.engine) treats the memory as one infinitely wide
 array; real ADRA arrays are banks of subarrays of rows x bitlines. This
@@ -16,13 +16,25 @@ of its subarrays at once (shared wordline drivers), so one bank serves
 and tiles beyond `banks` per round serialize into waves — the contention
 the per-bank ledger model charges.
 
+The RESIDENT region: FeFET rows are nonvolatile, so an operand written once
+(a weight plane stack, a paged KV block) can stay in its rows across calls —
+the paper's stored-operand assumption. A `ResidentSet` tracks those pinned
+plane stacks per bank under the row budget: every pin charges the ledger ONE
+operand load (per tile), every reuse charges zero, and rows claimed by
+residents shrink what `check_fits` allows a streaming access (the combined
+check names the resident occupancy in its error). Pins are LRU-evicted under
+pressure; `reserve()` entries (KV pages) are not evictable and fail loudly
+instead. Counters aggregate process-wide into `dispatch.cache_stats()`.
+
 Defaults are calibrated to the paper's 1024-row FeFET array
 (1024 x 1024 subarray => 1024 words per subarray activation).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+import weakref
+from collections import OrderedDict
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 from . import opset
 
@@ -64,14 +76,20 @@ class ArraySpec:
         """Words the whole array serves per wave (all banks active)."""
         return self.banks * self.tile_words
 
-    def check_fits(self, n_bits: int, ops: Sequence[str]) -> None:
+    def check_fits(self, n_bits: int, ops: Sequence[str],
+                   resident_rows: int = 0) -> None:
         """One access must fit its operand + result planes in the rows of a
-        subarray: 2 operand stacks of n_bits plus every requested output."""
+        subarray: 2 operand stacks of n_bits plus every requested output —
+        MINUS whatever rows the resident region has pinned (the combined
+        streaming + residency budget of one bank)."""
         need = 2 * n_bits + sum(opset.out_rows(op, n_bits) for op in ops)
-        if need > self.rows:
+        if need + resident_rows > self.rows:
+            occupancy = (f" with {resident_rows} rows held by resident "
+                         f"operands" if resident_rows else "")
             raise opset.CimOpError(
                 f"access needs {need} rows (2x{n_bits} operand planes + "
-                f"outputs {tuple(ops)}) but subarrays have {self.rows}")
+                f"outputs {tuple(ops)}){occupancy} but subarrays have "
+                f"{self.rows}")
 
     def plan(self, n_words: int) -> "TilePlan":
         if n_words < 1:
@@ -137,3 +155,250 @@ class TilePlan:
 
 #: the paper's array, four banks of four subarrays
 DEFAULT_SPEC = ArraySpec()
+
+
+# ---------------------------------------------------------------------------
+# the resident region: operands pinned in bank rows across calls
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ResidentEntry:
+    """One pinned occupant of the resident region.
+
+    pack         : the pinned PlanePack (None for a `reserve()` row claim,
+                   e.g. a paged KV block whose values live outside the
+                   packed domain but whose rows are spoken for).
+    rows_by_bank : rows this entry holds in each bank — n_bits plane rows
+                   per tile placed there (tiles on the same bank stack).
+    fingerprint  : identity of the source buffers; a mismatched `get()`
+                   drops the entry (stale pin) instead of returning it.
+    evictable    : LRU-evictable under pin pressure; reservations are not.
+    """
+
+    key: Tuple
+    pack: Any
+    rows_by_bank: Dict[int, int]
+    words32: float = 0.0
+    fingerprint: Tuple = ()
+    evictable: bool = True
+    aux: Any = None
+    hits: int = 0
+
+
+class ResidentSet:
+    """Row-budget-checked resident region of one banked array.
+
+    `pin(key, pack)` writes a plane stack into rows once — charging the
+    ledger the operand-load accesses a streaming execution would pay per
+    call — and keeps it addressable across calls; `get(key)` is the warm
+    path (zero load charges, `resident_reuses` counted by the caller's
+    schedule). Pins are LRU-ordered and evicted when a new pin does not fit
+    the per-bank row budget (`rows - reserve_rows`); `reserve()` claims
+    rows without a pack (paged KV blocks) and is never evicted silently.
+    """
+
+    def __init__(self, spec: Optional[ArraySpec] = None,
+                 reserve_rows: int = 0):
+        self.spec = spec or DEFAULT_SPEC
+        if reserve_rows < 0 or reserve_rows >= self.spec.rows:
+            raise opset.CimOpError(
+                f"reserve_rows must be in [0, {self.spec.rows}), "
+                f"got {reserve_rows}")
+        self.reserve_rows = reserve_rows
+        self._entries: "OrderedDict[Tuple, ResidentEntry]" = OrderedDict()
+        self.pins = 0
+        self.reserves = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+        _ALL_SETS.add(self)
+
+    # -- occupancy ----------------------------------------------------------
+    def rows_per_bank(self) -> Dict[int, int]:
+        out: Dict[int, int] = {}
+        for e in self._entries.values():
+            for b, r in e.rows_by_bank.items():
+                out[b] = out.get(b, 0) + r
+        return out
+
+    @property
+    def resident_rows(self) -> int:
+        """Rows held in the busiest bank — what a streaming access loses."""
+        return max(self.rows_per_bank().values(), default=0)
+
+    def _rows_for(self, n_bits: int, n_words: int) -> Dict[int, int]:
+        """Per-bank rows of an n_bits pack of n_words: n_bits plane rows
+        per tile on the tile's round-robin bank (same-bank tiles stack)."""
+        plan = self.spec.plan(n_words)
+        return {b: n_bits * n for (_d, b), n in plan.bank_counts(1).items()}
+
+    def fits(self, rows_by_bank: Dict[int, int]) -> bool:
+        occ = self.rows_per_bank()
+        budget = self.spec.rows - self.reserve_rows
+        return all(occ.get(b, 0) + r <= budget
+                   for b, r in rows_by_bank.items())
+
+    # -- lifecycle ----------------------------------------------------------
+    def peek(self, key: Tuple,
+             fingerprint: Optional[Tuple] = None) -> bool:
+        """Presence+fingerprint test WITHOUT counters or LRU movement — the
+        warm-pass probe (a real `get` follows for entries actually used)."""
+        entry = self._entries.get(key)
+        return entry is not None and (
+            fingerprint is None or entry.fingerprint == tuple(fingerprint))
+
+    def get(self, key: Tuple,
+            fingerprint: Optional[Tuple] = None) -> Optional[ResidentEntry]:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            _STATS["resident_misses"] += 1
+            return None
+        if fingerprint is not None and entry.fingerprint != fingerprint:
+            # the source buffers changed identity: the pinned rows are stale
+            del self._entries[key]
+            self.invalidations += 1
+            _STATS["resident_invalidations"] += 1
+            self.misses += 1
+            _STATS["resident_misses"] += 1
+            return None
+        entry.hits += 1
+        self.hits += 1
+        _STATS["resident_hits"] += 1
+        self._entries.move_to_end(key)
+        return entry
+
+    def pin(self, key: Tuple, pack, fingerprint: Tuple = (),
+            aux: Any = None) -> ResidentEntry:
+        """Pack `pack` into resident rows (evicting LRU pins to fit) and
+        charge the one-time operand load the pin replaces per call."""
+        from .accounting import LEDGER
+
+        if key in self._entries:
+            del self._entries[key]        # re-pin: release the stale rows
+        rows = self._rows_for(pack.n_bits, pack.n_words)
+        self._make_room(key, rows)
+        words32 = pack.n_words * pack.n_bits / 32.0
+        entry = ResidentEntry(key=key, pack=pack, rows_by_bank=rows,
+                              words32=words32, fingerprint=tuple(fingerprint),
+                              evictable=True, aux=aux)
+        self._entries[key] = entry
+        self.pins += 1
+        _STATS["resident_pins"] += 1
+        LEDGER.charge_load(pack.n_bits, pack.n_words,
+                           n_tiles=self.spec.plan(pack.n_words).n_tiles)
+        return entry
+
+    def reserve(self, key: Tuple, n_rows: int, bank: int = 0,
+                words32: float = 0.0,
+                fingerprint: Tuple = ()) -> ResidentEntry:
+        """Claim `n_rows` on one bank without a pack (a paged KV block's
+        rows). Not evictable: a failed fit raises instead of silently
+        dropping someone else's state."""
+        if key in self._entries:
+            del self._entries[key]
+        rows = {int(bank) % self.spec.banks: int(n_rows)}
+        self._make_room(key, rows)
+        entry = ResidentEntry(key=key, pack=None, rows_by_bank=rows,
+                              words32=words32, fingerprint=tuple(fingerprint),
+                              evictable=False)
+        self._entries[key] = entry
+        self.reserves += 1
+        _STATS["resident_reserves"] += 1
+        return entry
+
+    def _make_room(self, key: Tuple, rows_by_bank: Dict[int, int]) -> None:
+        budget = self.spec.rows - self.reserve_rows
+        if any(r > budget for r in rows_by_bank.values()):
+            raise opset.CimOpError(
+                f"resident entry {key!r} needs {max(rows_by_bank.values())} "
+                f"rows on one bank but the resident budget is {budget} "
+                f"(rows {self.spec.rows} - reserve {self.reserve_rows})")
+        while not self.fits(rows_by_bank):
+            victim = next((k for k, e in self._entries.items()
+                           if e.evictable), None)
+            if victim is None:
+                occ = self.rows_per_bank()
+                raise opset.CimOpError(
+                    f"resident entry {key!r} does not fit: occupancy "
+                    f"{occ} of {budget} rows/bank is all reservations")
+            del self._entries[victim]
+            self.evictions += 1
+            _STATS["resident_evictions"] += 1
+
+    def release(self, key: Tuple) -> bool:
+        return self._entries.pop(key, None) is not None
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._entries), "pins": self.pins,
+                "reserves": self.reserves,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations,
+                "resident_rows": self.resident_rows}
+
+
+#: every live ResidentSet (weak: test-local sets vanish with their tests)
+_ALL_SETS: "weakref.WeakSet[ResidentSet]" = weakref.WeakSet()
+
+#: process-wide counters surfaced through dispatch.cache_stats()
+_STATS: Dict[str, int] = {}
+
+
+def _reset_stats() -> None:
+    _STATS.update(resident_pins=0, resident_reserves=0, resident_hits=0,
+                  resident_misses=0, resident_evictions=0,
+                  resident_invalidations=0)
+
+
+_reset_stats()
+
+#: process-wide resident set per geometry (the one `resident_rows_for`
+#: consults and the serving stack shares between weight pins and KV pages)
+_RESIDENT_SETS: Dict[ArraySpec, ResidentSet] = {}
+
+
+def resident_set(spec: Optional[ArraySpec] = None) -> ResidentSet:
+    """The process-wide ResidentSet for `spec` (DEFAULT_SPEC when None).
+
+    Registry sets keep a quarter of the rows as reserve: headroom the
+    combined `check_fits` budget guarantees streamed access planes — pins
+    can never squeeze an access out of its own subarray."""
+    spec = spec or DEFAULT_SPEC
+    rs = _RESIDENT_SETS.get(spec)
+    if rs is None:
+        rs = _RESIDENT_SETS[spec] = ResidentSet(
+            spec, reserve_rows=spec.rows // 4)
+    return rs
+
+
+def resident_rows_for(spec: Optional[ArraySpec]) -> int:
+    """Busiest-bank resident occupancy of the registry set for `spec` —
+    what the dispatcher folds into the combined check_fits budget."""
+    rs = _RESIDENT_SETS.get(spec or DEFAULT_SPEC)
+    return rs.resident_rows if rs is not None else 0
+
+
+def resident_stats() -> Dict[str, int]:
+    """Aggregated pin/hit/eviction counters across every ResidentSet."""
+    out = dict(_STATS)
+    out["resident_entries"] = sum(len(s) for s in _ALL_SETS)
+    out["resident_rows"] = max((s.resident_rows for s in _ALL_SETS),
+                               default=0)
+    return out
+
+
+def clear_resident() -> None:
+    """Drop every registry ResidentSet and zero the aggregate counters."""
+    for rs in list(_ALL_SETS):
+        rs.clear()
+    _RESIDENT_SETS.clear()
+    _reset_stats()

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from . import engine, opset
+from . import array as array_mod
 from .accounting import LEDGER
 from .array import DEFAULT_SPEC, ArraySpec, TilePlan
 from .backends import Backend, get_backend
@@ -92,10 +93,16 @@ def cache_stats() -> Dict[str, int]:
     """Counters of the compiled-schedule cache: hits/misses/evictions of
     the program table plus `dispatches`, the total number of jitted-program
     invocations (whole-schedule step programs and per-step tiled programs
-    alike). A warm macro or fused region costs exactly one dispatch."""
-    return {"hits": _HITS, "misses": _MISSES, "entries": len(_PROGRAMS),
-            "evictions": _EVICTIONS, "capacity": _CAPACITY,
-            "dispatches": _DISPATCHES}
+    alike). A warm macro or fused region costs exactly one dispatch.
+    Resident-region counters (resident_pins/hits/misses/evictions/
+    invalidations, aggregated across every ResidentSet) ride along so one
+    call answers both "did the program cache stay warm" and "did the
+    operands stay pinned"."""
+    stats = {"hits": _HITS, "misses": _MISSES, "entries": len(_PROGRAMS),
+             "evictions": _EVICTIONS, "capacity": _CAPACITY,
+             "dispatches": _DISPATCHES}
+    stats.update(array_mod.resident_stats())
+    return stats
 
 
 def clear_schedule_cache() -> None:
@@ -222,7 +229,10 @@ def _prepare_tiles(a: PlanePack, b: PlanePack, ops: Sequence[str],
     checks, tile placement and the padded tile stacks."""
     a, b, ops = engine.prepare_operands(a, b, ops)
     spec = spec or DEFAULT_SPEC
-    spec.check_fits(a.n_bits, ops)
+    # combined budget: access planes must fit alongside whatever the
+    # process-wide resident region for this geometry has pinned in rows
+    spec.check_fits(a.n_bits, ops,
+                    resident_rows=array_mod.resident_rows_for(spec))
     plan = spec.plan(a.n_words)
 
     n_devices = 1

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import macro, planner
+from . import array as array_mod
 from . import trace as trace_mod
 from .array import ArraySpec
 from .opset import CimOpError
@@ -128,6 +129,33 @@ def _broadcast_pack(pack: PlanePack, shape: Tuple[int, ...]) -> PlanePack:
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class ResidentAtom:
+    """One region input pinnable in the resident region.
+
+    ai      : index into the region's in_atoms (== operand leaf position).
+    kind    : "matmul_rhs" — every in-region consumer is a dot_general with
+              this atom as its rhs, so the pinned stack is the expanded
+              [M, K_pad, N] entry pack (macro.matmul_rhs_pack) and warm
+              calls skip the rhs expansion AND pack entirely;
+              "pack" — the atom's plain entry pack is pinned and seeded
+              into the region's pack env.
+    n_words : logical words of the pinned pack (fit checks + charges).
+    m       : matmul_rhs only — the lhs row count baked into the pack.
+    """
+
+    ai: int
+    kind: str
+    n_bits: int
+    signed: bool
+    n_words: int
+    m: int = 0
+    #: matmul_rhs only — region op indices of the zero-access pass-through
+    #: chain (convert/reshape) between the atom and the dot's rhs: replayed
+    #: on the host when pinning, SKIPPED in the resident region body
+    chain_eqns: Tuple[int, ...] = ()
+
+
 @dataclasses.dataclass
 class Region:
     """A maximal run of eligible eqns fused into one Schedule.
@@ -137,7 +165,13 @@ class Region:
     trace). `donatable` indexes the in_atoms that are dead after the region
     — safe for jit buffer donation. `key` is the structural cache key:
     dataflow with canonicalized var numbering plus operand signatures, so
-    two structurally identical regions share one compiled program."""
+    two structurally identical regions share one compiled program.
+
+    `resident` (set by residency planning) names the in_atoms whose entry
+    packs are pinned across calls; `schedule_resident` is the same step
+    plan with those operand sides named resident — a DIFFERENT Schedule
+    value, so resident and streamed executions of the same region occupy
+    different program-cache slots by construction."""
 
     name: str
     ops: List[TracedOp]
@@ -146,6 +180,10 @@ class Region:
     in_atoms: Tuple[Any, ...] = ()
     donatable: Tuple[int, ...] = ()
     key: Tuple = ()
+    index: int = 0
+    resident: Tuple[ResidentAtom, ...] = ()
+    schedule_resident: Optional[planner.Schedule] = None
+    donatable_resident: Tuple[int, ...] = ()
 
     @property
     def accesses(self) -> int:
@@ -208,6 +246,88 @@ def _region_key(region: Region) -> Tuple:
     return tuple(parts)
 
 
+#: consumers whose getp() call always uses the operand's OWN aval shape
+#: (unary source-shape reads) — safe for a penv-seeded resident pack
+_SRC_SHAPE_OPS = ("reduce_sum", "convert_element_type", "reshape",
+                  "broadcast_in_dim")
+
+
+def _classify_resident(region: Region, ai: int, atom) -> \
+        Optional[ResidentAtom]:
+    """How (and whether) one derived region input can be pinned.
+
+    "matmul_rhs" when the atom — possibly through a chain of zero-access
+    unary pass-throughs (convert/reshape) with no other consumers — is
+    consumed only by dot_generals taking it as rhs with one consistent
+    (M, n_bits, signedness): the expanded broadcast pack is then pinnable,
+    the chain eqns are replayed on the host once at pin time and skipped in
+    the resident body, and the warm path skips the whole rhs build.
+    Otherwise "pack" when every consumer reads the atom at its own aval
+    shape (or through geti's unpack) — the plain entry pack seeds the
+    region's pack env. None when the consumption pattern would need a
+    per-call repack anyway (e.g. non-scalar broadcast into a wider
+    elementwise shape)."""
+    aval = aval_of(atom)
+    consumers = [op for op in region.ops
+                 if any(a is atom for a in op.invars)]
+    if not consumers:                      # pragma: no cover
+        return None
+    # forward walk: frontier is the value the dots would consume
+    frontier = atom
+    chain_eqns: List[int] = []
+    mk = None
+    rhs_only = True
+    while True:
+        cons = [(ei, op) for ei, op in enumerate(region.ops)
+                if any(a is frontier for a in op.invars)]
+        if not cons:
+            rhs_only = False
+            break
+        if all(op.name == "dot_general" and op.invars[1] is frontier
+               and op.invars[0] is not frontier for _, op in cons):
+            for _, op in cons:
+                lhs_aval = aval_of(op.invars[0])
+                sig = (int(lhs_aval.shape[0]), op.n_bits,
+                       dtype_signed(lhs_aval.dtype))
+                if mk is None:
+                    mk = sig
+                elif mk != sig:
+                    rhs_only = False
+                    break
+            break
+        ei, op = cons[0]
+        if len(cons) != 1 \
+                or op.name not in ("convert_element_type", "reshape") \
+                or op.invars[0] is not frontier \
+                or isinstance(op.outvars[0], jax.core.DropVar) \
+                or op.outvars[0] in region.unpack_vars:
+            rhs_only = False
+            break
+        chain_eqns.append(ei)
+        frontier = op.outvars[0]
+    f_aval = aval_of(frontier)
+    if rhs_only and mk is not None and len(f_aval.shape) == 2:
+        m, n_bits, signed = mk
+        k, n = int(f_aval.shape[0]), int(f_aval.shape[1])
+        k_pad = 1 << planner._log2_ceil(k)
+        return ResidentAtom(ai=ai, kind="matmul_rhs", n_bits=n_bits,
+                            signed=signed, n_words=m * k_pad * n, m=m,
+                            chain_eqns=tuple(chain_eqns))
+    n_words = 1
+    for d in aval.shape:
+        n_words *= int(d)
+    for op in consumers:
+        if op.name == "dot_general" or (op.name in _SRC_SHAPE_OPS
+                                        and op.invars[0] is atom):
+            continue
+        out_shape = tuple(aval_of(op.outvars[0]).shape)
+        if out_shape != tuple(aval.shape) and n_words != 1:
+            return None    # would repack at the broadcast shape per call
+    return ResidentAtom(ai=ai, kind="pack",
+                        n_bits=dtype_bits(aval.dtype),
+                        signed=dtype_signed(aval.dtype), n_words=n_words)
+
+
 def _read_host(env: Dict[Any, Any], atom):
     if isinstance(atom, jax.core.Literal):
         return jnp.asarray(atom.val, dtype=atom.aval.dtype)
@@ -226,14 +346,20 @@ class LoweredComputation:
 
     def __init__(self, tr: trace_mod.Trace,
                  backend: Optional[str] = None,
-                 spec: Optional[ArraySpec] = None, mesh=None):
+                 spec: Optional[ArraySpec] = None, mesh=None,
+                 resident_leaf_idx: Tuple[int, ...] = (),
+                 resident_set=None):
         self.trace = tr
         self.backend = backend
         self.spec = spec
         self.mesh = mesh
+        self.resident_leaf_idx = tuple(resident_leaf_idx)
+        self.resident_set = resident_set
         self.items: List[Tuple[str, Any]] = []
         self.regions: List[Region] = []
+        self._warm_skip: frozenset = frozenset()
         self._build()
+        self._plan_residency()
 
     # -- structure ----------------------------------------------------------
     def _build(self) -> None:
@@ -256,7 +382,8 @@ class LoweredComputation:
                 region = Region(name=f"region{len(self.regions)}",
                                 ops=list(buf),
                                 schedule=planner.concat_schedules(
-                                    scheds, macro="region"))
+                                    scheds, macro="region"),
+                                index=len(self.regions))
                 self.regions.append(region)
                 items.append(("region", region))
             buf.clear()
@@ -312,6 +439,93 @@ class LoweredComputation:
                     and a not in consumed_after[i])
                 payload.key = _region_key(payload)
 
+    # -- residency planning -------------------------------------------------
+    def _plan_residency(self) -> None:
+        """Decide, statically, which region inputs can live in array rows.
+
+        A region input is resident-eligible when its value is DERIVED purely
+        from the resident arguments (seeded at the jaxpr invars, propagated
+        through eqns whose every Var input is itself derived — closed-over
+        constants and literals are call-invariant and never block), its
+        in-region consumption pattern admits a pinnable entry pack, and that
+        pack's rows fit the empty resident budget of the ResidentSet's
+        geometry (an oversize atom silently stays streamed — never an
+        error). The warm-skip set then marks host eqns that exist ONLY to
+        produce resident-derived values: with every pin warm they are pure
+        dead weight and the hybrid executor skips them."""
+        rs = self.resident_set
+        if rs is None or not self.resident_leaf_idx:
+            return
+        jaxpr = self.trace.closed.jaxpr
+        derived = {jaxpr.invars[i] for i in self.resident_leaf_idx}
+        for op in self.trace.ops:
+            vars_in = [a for a in op.invars if isinstance(a, jax.core.Var)]
+            if all(v in derived for v in vars_in):
+                derived.update(v for v in op.outvars
+                               if not isinstance(v, jax.core.DropVar))
+        budget = rs.spec.rows - rs.reserve_rows
+        for region in self.regions:
+            resident: List[ResidentAtom] = []
+            for ai, atom in enumerate(region.in_atoms):
+                if not isinstance(atom, jax.core.Var) or atom not in derived:
+                    continue
+                ra = _classify_resident(region, ai, atom)
+                if ra is None:
+                    continue
+                rows = rs._rows_for(ra.n_bits, ra.n_words)
+                if max(rows.values(), default=0) > budget:
+                    continue
+                resident.append(ra)
+            if resident:
+                region.resident = tuple(resident)
+                names = tuple(f"in{ra.ai}" for ra in resident)
+                region.schedule_resident = region.schedule \
+                    .with_operands(*names).with_resident(*names)
+                rset = {ra.ai for ra in resident}
+                region.donatable_resident = tuple(
+                    j for j in region.donatable if j not in rset)
+        if not any(r.resident for r in self.regions):
+            return
+        needed = {v for v in jaxpr.outvars if isinstance(v, jax.core.Var)}
+        skip = set()
+        for i in range(len(self.items) - 1, -1, -1):
+            kind, payload = self.items[i]
+            if kind == "region":
+                rset = {ra.ai for ra in payload.resident}
+                needed.update(
+                    a for j, a in enumerate(payload.in_atoms)
+                    if isinstance(a, jax.core.Var) and j not in rset)
+            else:
+                outs = [v for v in payload.outvars
+                        if not isinstance(v, jax.core.DropVar)]
+                if not any(v in needed for v in outs):
+                    skip.add(i)
+                else:
+                    needed.update(v for v in payload.invars
+                                  if isinstance(v, jax.core.Var))
+        self._warm_skip = frozenset(skip)
+
+    def _build_resident_pack(self, region: Region, ra: ResidentAtom,
+                             value) -> PlanePack:
+        """The concrete plane stack a ResidentSet pins for one atom —
+        bitwise identical to what the region body would build per call."""
+        arr = jnp.asarray(value)
+        if ra.kind == "matmul_rhs":
+            # replay the skipped pass-through chain on the host: these are
+            # the eqns between the region input and the dot's rhs
+            for ei in ra.chain_eqns:
+                op = region.ops[ei]
+                oav = aval_of(op.outvars[0])
+                if op.name == "convert_element_type":
+                    arr = arr.astype(oav.dtype)
+                else:
+                    arr = arr.reshape(tuple(oav.shape))
+            return macro.matmul_rhs_pack(arr, ra.m, ra.n_bits,
+                                         signed=ra.signed)
+        if arr.dtype == jnp.bool_:
+            arr = arr.astype(jnp.int32)
+        return PlanePack.pack(arr, ra.n_bits, signed=ra.signed)
+
     # -- execution ----------------------------------------------------------
     def execute(self, *args):
         leaves = jax.tree_util.tree_leaves(args)
@@ -325,11 +539,52 @@ class LoweredComputation:
         # substitution); seed the env so those reads resolve
         env.update(zip(self.trace.closed.jaxpr.constvars,
                        self.trace.closed.consts))
-        for kind, payload in self.items:
+
+        # residency: active only with concrete resident leaves — under an
+        # outer jit the leaves are Tracers, whose identity is per-trace and
+        # whose planes must not be captured in a pin, so the call falls
+        # back to the plain streamed path (charged once per outer trace,
+        # exactly as before)
+        rs = self.resident_set
+        resident_on = (rs is not None and self.resident_leaf_idx
+                       and any(r.resident for r in self.regions)
+                       and not any(isinstance(leaves[i], jax.core.Tracer)
+                                   for i in self.resident_leaf_idx))
+        fp = None
+        keep = None
+        warm = False
+        if resident_on:
+            # the fingerprint is PART of the key: one LoweredComputation is
+            # shared by every caller with these avals (e.g. identical layers
+            # of a stack), and each caller's weights deserve their own pin.
+            # The entry keeps strong refs (aux) to the fingerprinted arrays
+            # and this computation, so a recycled id() can never alias.
+            fp = tuple(id(leaves[i]) for i in self.resident_leaf_idx)
+            keep = tuple(leaves[i] for i in self.resident_leaf_idx) + (self,)
+            warm = all(
+                rs.peek(("lowered", id(self), r.index, ra.ai) + fp, fp)
+                for r in self.regions for ra in r.resident)
+
+        for i, (kind, payload) in enumerate(self.items):
             if kind == "host":
+                if warm and i in self._warm_skip:
+                    continue
                 self._run_host(payload, env)
-            else:
-                self._run_region(payload, env)
+                continue
+            rmap = None
+            if resident_on and payload.resident:
+                rmap = {}
+                for ra in payload.resident:
+                    key = ("lowered", id(self), payload.index, ra.ai) + fp
+                    entry = rs.get(key, fingerprint=fp)
+                    if entry is None:
+                        value = _read_host(env, payload.in_atoms[ra.ai])
+                        entry = rs.pin(
+                            key,
+                            self._build_resident_pack(payload, ra, value),
+                            fingerprint=fp, aux=keep)
+                    rmap[ra.ai] = entry.pack
+            self._run_region(payload, env, resident_map=rmap)
         outs = [_read_host(env, v) for v in self.trace.closed.jaxpr.outvars]
         out_tree = jax.tree_util.tree_structure(self.trace.out_shape)
         return jax.tree_util.tree_unflatten(out_tree, outs)
@@ -349,36 +604,77 @@ class LoweredComputation:
             if not isinstance(var, jax.core.DropVar):
                 env[var] = val
 
-    def _run_region(self, region: Region, env: Dict[Any, Any]) -> None:
+    def _run_region(self, region: Region, env: Dict[Any, Any],
+                    resident_map: Optional[Dict[int, PlanePack]] = None
+                    ) -> None:
         """Execute a fused region as ONE jitted XLA program: gather the
         region's input leaves from the host env, invoke (or compile) the
-        cached step program, land the unpacked outputs back in the env."""
-        leaves = tuple(_read_host(env, a) for a in region.in_atoms)
+        cached step program, land the unpacked outputs back in the env.
+
+        With `resident_map` (atom index -> pinned PlanePack) the resident
+        atoms enter the program AS plane stacks — their raw values are
+        never read, their entry packs never rebuilt — under the resident
+        schedule and a resident-marked body key, so streamed and resident
+        executions of one region never share a compiled program."""
+        leaves = tuple(
+            resident_map[j] if resident_map and j in resident_map
+            else _read_host(env, a)
+            for j, a in enumerate(region.in_atoms))
+        if resident_map:
+            schedule = region.schedule_resident
+            body_key = ("region", region.key,
+                        ("resident",) + region.resident)
+            donatable = region.donatable_resident
+            body = self._region_body(region, frozenset(resident_map))
+        else:
+            schedule = region.schedule
+            body_key = ("region", region.key)
+            donatable = region.donatable
+            body = self._region_body(region)
         # donation only pays (and only passes silently) on accelerators;
         # CPU jit ignores donations with a warning, so skip it there
-        donate = region.donatable \
+        donate = donatable \
             if jax.default_backend() in ("gpu", "tpu") else ()
         outs = macro.run_schedule_program(
-            region.schedule, self._region_body(region), leaves,
-            body_key=("region", region.key), backend=self.backend,
+            schedule, body, leaves,
+            body_key=body_key, backend=self.backend,
             spec=self.spec, mesh=self.mesh, donate=donate)
         for var, val in zip(region.unpack_vars, outs):
             env[var] = val
 
-    def _region_body(self, region: Region):
+    def _region_body(self, region: Region,
+                     resident_ais: frozenset = frozenset()):
         """The traceable region computation `run_schedule_program` compiles:
         the per-eqn execution loop over the program's shared cursor."""
+        resident_kinds = {ra.ai: ra for ra in region.resident
+                          if ra.ai in resident_ais}
+        # eqns replayed into the pinned pack at pin time: dead in the body
+        skip_eqns = frozenset(ei for ra in resident_kinds.values()
+                              for ei in ra.chain_eqns)
 
         def body(cur, *leaves):
             chain = macro.ChainExecutor.from_cursor(cur)
             var_env: Dict[Any, Any] = {}
             const_env: Dict[int, Any] = {}
-            for atom, leaf in zip(region.in_atoms, leaves):
-                if isinstance(atom, ConstVal):
+            resident_matmul: Dict[Any, PlanePack] = {}
+            penv: Dict[Any, PlanePack] = {}
+            for j, (atom, leaf) in enumerate(zip(region.in_atoms, leaves)):
+                ra = resident_kinds.get(j)
+                if ra is not None:
+                    if ra.kind == "matmul_rhs":
+                        # keyed at the END of the pass-through chain — the
+                        # var the dot handler actually consumes; the reuse
+                        # charge lands inside _matmul_with
+                        fvar = region.ops[ra.chain_eqns[-1]].outvars[0] \
+                            if ra.chain_eqns else atom
+                        resident_matmul[fvar] = leaf
+                    else:
+                        penv[atom] = leaf     # pre-seeded entry pack
+                        cur.charge_resident(leaf.n_bits, leaf.n_words)
+                elif isinstance(atom, ConstVal):
                     const_env[id(atom)] = leaf
                 else:
                     var_env[atom] = leaf
-            penv: Dict[Any, PlanePack] = {}
 
             def read(atom):
                 if isinstance(atom, jax.core.Literal):
@@ -404,6 +700,10 @@ class LoweredComputation:
                     arr = jnp.broadcast_to(arr, tuple(shape))
                 p = PlanePack.pack(arr, dtype_bits(aval.dtype),
                                    signed=dtype_signed(aval.dtype))
+                # a freshly built entry pack is a STREAMED operand load:
+                # its planes are driven into rows before the first access
+                # (resident atoms never reach here — they are pre-seeded)
+                cur.charge_load(p.n_bits, p.n_words)
                 if isinstance(atom, jax.core.Var) and \
                         tuple(shape) == tuple(aval.shape):
                     penv[atom] = p    # entry pack: reused by later consumers
@@ -417,7 +717,9 @@ class LoweredComputation:
                     return penv[atom].unpack().astype(aval.dtype)
                 return jnp.asarray(read(atom))
 
-            for op in region.ops:
+            for ei, op in enumerate(region.ops):
+                if ei in skip_eqns:
+                    continue
                 out_aval = aval_of(op.outvars[0])
                 shape = tuple(out_aval.shape)
                 name = op.name
@@ -451,10 +753,14 @@ class LoweredComputation:
                     src_shape = tuple(aval_of(op.invars[0]).shape)
                     res = chain.reduce_sum(getp(op.invars[0], src_shape))
                 elif name == "dot_general":
+                    rb = resident_matmul.get(op.invars[1]) \
+                        if isinstance(op.invars[1], jax.core.Var) else None
                     res = chain.matmul(geti(op.invars[0]),
-                                       geti(op.invars[1]), op.n_bits,
+                                       None if rb is not None
+                                       else geti(op.invars[1]), op.n_bits,
                                        signed=dtype_signed(
-                                           aval_of(op.invars[0]).dtype))
+                                           aval_of(op.invars[0]).dtype),
+                                       b_pack=rb)
                 elif name == "convert_element_type":
                     src_shape = tuple(aval_of(op.invars[0]).shape)
                     res = getp(op.invars[0], src_shape)
@@ -520,12 +826,35 @@ class LoweredFunction:
     LRU (SIGNATURE_CACHE_CAPACITY); an evicted signature simply retraces."""
 
     def __init__(self, fn, backend: Optional[str] = None,
-                 spec: Optional[ArraySpec] = None, mesh=None):
+                 spec: Optional[ArraySpec] = None, mesh=None,
+                 resident_argnums: Tuple[int, ...] = (),
+                 resident_set=None):
         self.fn = fn
         self.backend = backend
         self.spec = spec
         self.mesh = mesh
+        self.resident_argnums = tuple(resident_argnums)
+        self.resident_set = resident_set
+        if self.resident_argnums and self.resident_set is None:
+            self.resident_set = array_mod.resident_set(spec)
         self._cache: "OrderedDict[Any, LoweredComputation]" = OrderedDict()
+
+    def _resident_leaf_idx(self, args) -> Tuple[int, ...]:
+        """Flat leaf indices of the resident argnums (the positions
+        `execute` fingerprints and the residency planner seeds from)."""
+        if not self.resident_argnums:
+            return ()
+        spans = []
+        start = 0
+        for a in args:
+            n = len(jax.tree_util.tree_leaves(a))
+            spans.append((start, start + n))
+            start += n
+        idx: List[int] = []
+        for an in self.resident_argnums:
+            if an < len(spans):
+                idx.extend(range(*spans[an]))
+        return tuple(idx)
 
     def trace(self, *args) -> LoweredComputation:
         leaves, treedef = jax.tree_util.tree_flatten(args)
@@ -535,7 +864,9 @@ class LoweredFunction:
         if comp is None:
             comp = LoweredComputation(
                 trace_mod.trace(self.fn, *args), backend=self.backend,
-                spec=self.spec, mesh=self.mesh)
+                spec=self.spec, mesh=self.mesh,
+                resident_leaf_idx=self._resident_leaf_idx(args),
+                resident_set=self.resident_set)
             self._cache[key] = comp
             while len(self._cache) > SIGNATURE_CACHE_CAPACITY:
                 self._cache.popitem(last=False)
@@ -548,7 +879,9 @@ class LoweredFunction:
 
 
 def lower(fn, backend: Optional[str] = None,
-          spec: Optional[ArraySpec] = None, mesh=None) -> LoweredFunction:
+          spec: Optional[ArraySpec] = None, mesh=None,
+          resident_argnums: Tuple[int, ...] = (),
+          resident_set=None) -> LoweredFunction:
     """Compile `fn` into a hybrid CiM/host callable (see module docstring).
 
     backend : CiM backend name for the fused regions (registry default
@@ -557,5 +890,15 @@ def lower(fn, backend: Optional[str] = None,
               through the dispatch layer and the ledger charges per
               (device, bank) activations.
     mesh    : optional device mesh forwarded to the tiling dispatcher.
+    resident_argnums : argument positions whose (pure) derivatives may be
+              pinned in the resident region: region inputs derived solely
+              from these arguments skip their per-call entry pack once
+              pinned, and host eqns that only feed pinned values are
+              skipped on warm passes. Identity-fingerprinted — pass the
+              SAME weight arrays each call to stay warm.
+    resident_set : the ResidentSet to pin into (the process-wide registry
+              set for `spec` when omitted).
     """
-    return LoweredFunction(fn, backend=backend, spec=spec, mesh=mesh)
+    return LoweredFunction(fn, backend=backend, spec=spec, mesh=mesh,
+                           resident_argnums=resident_argnums,
+                           resident_set=resident_set)

@@ -124,6 +124,23 @@ class ScheduleCursor:
         else:
             LEDGER.charge_reduction(words32)
 
+    def charge_load(self, n_bits: int, n_words: int) -> None:
+        """Operand-load row-writes for one STREAMED entry pack built inside
+        this schedule (one load access per tile it lands on). Resident
+        operands never reach this — they charge `charge_resident` instead."""
+        n_tiles = self.spec.plan(n_words).n_tiles if self.spec else 1
+        if self.charges is not None:
+            self.charges.append(("load", n_bits, n_words, n_tiles))
+        else:
+            LEDGER.charge_load(n_bits, n_words, n_tiles=n_tiles)
+
+    def charge_resident(self, n_bits: int, n_words: int) -> None:
+        """One resident-operand reuse: entry pack (and its loads) skipped."""
+        if self.charges is not None:
+            self.charges.append(("resident", n_bits, n_words))
+        else:
+            LEDGER.charge_resident_reuse(n_bits, n_words)
+
     def remaining(self) -> Tuple[planner.Step, ...]:
         return self.schedule.steps[self._i:]
 
@@ -217,6 +234,10 @@ def run_schedule_program(schedule: planner.Schedule, body, operands,
     if prog is not None:
         return prog(*leaves)
 
+    # operand-load charges are the BODY's responsibility (cur.charge_load /
+    # charge_resident at the point a streamed entry pack is built), never
+    # implied by an operand's type: a top-level PlanePack may already live
+    # in rows, and eager-cursor execution must charge identically
     charges: list = []
 
     def fn(*flat):
@@ -472,27 +493,66 @@ def reduce_sum(a: PlanePack, backend: Optional[str] = None,
 # ---------------------------------------------------------------------------
 
 
-def _matmul_with(cur: ScheduleCursor, a: jax.Array, b: jax.Array,
-                 n_bits: int, signed: bool = True) -> PlanePack:
+def matmul_rhs_pack(b: jax.Array, m: int, n_bits: int,
+                    signed: bool = True) -> PlanePack:
+    """The expanded [M, K_pad, N] rhs entry pack of a matmul — the plane
+    stack a ResidentSet pins so warm calls skip building (and loading) it.
+    Built OUTSIDE any trace: the result is a concrete pack whose planes can
+    live in array rows across calls."""
+    b = jnp.asarray(b)
+    if b.ndim != 2:
+        raise CimOpError(f"matmul rhs must be [K, N], got {b.shape}")
+    k, n = b.shape
+    k_pad = 1 << planner._log2_ceil(k)
+    b_exp = jnp.zeros((m, k_pad, n), jnp.int32).at[:, :k, :].set(
+        jnp.broadcast_to(b[None, :, :], (m, k, n)).astype(jnp.int32))
+    return PlanePack.pack(b_exp, n_bits, signed=signed)
+
+
+def _matmul_with(cur: ScheduleCursor, a: jax.Array, b,
+                 n_bits: int, signed: bool = True,
+                 b_pack: Optional[PlanePack] = None) -> PlanePack:
     """The matmul dataflow over an open cursor: broadcast [M, K_pad, N]
     operand layout, ONE shift-and-add multiply, log2(K_pad) stride-N tree
     reduction, result gathered to an [M, N] pack. Shared by the standalone
     `matmul` wrapper and the lowering compiler's fused-region executor
-    (which passes a region cursor mid-schedule)."""
+    (which passes a region cursor mid-schedule).
+
+    With `b_pack` (a pinned `matmul_rhs_pack`) the rhs side is RESIDENT:
+    its expansion and entry pack are skipped entirely — the streamed lhs
+    pays its load, the rhs charges one zero-load resident reuse — which is
+    the paper's stored-operand execution made literal."""
     a = jnp.asarray(a)
-    b = jnp.asarray(b)
-    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
-        raise CimOpError(f"matmul needs [M,K] x [K,N], got {a.shape} {b.shape}")
-    m, k = a.shape
-    n = b.shape[1]
-    k_pad = 1 << planner._log2_ceil(k)
+    if b_pack is not None:
+        if a.ndim != 2:
+            raise CimOpError(f"matmul needs [M,K] lhs, got {a.shape}")
+        m, k = a.shape
+        mm, k_pad, n = b_pack.shape
+        if mm != m or k > k_pad:
+            raise CimOpError(
+                f"resident rhs pack {b_pack.shape} does not match lhs "
+                f"{a.shape} (expanded for M={mm}, K_pad={k_pad})")
+        pb = b_pack
+    else:
+        b = jnp.asarray(b)
+        if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+            raise CimOpError(
+                f"matmul needs [M,K] x [K,N], got {a.shape} {b.shape}")
+        m, k = a.shape
+        n = b.shape[1]
+        k_pad = 1 << planner._log2_ceil(k)
+        b_exp = jnp.zeros((m, k_pad, n), jnp.int32).at[:, :k, :].set(
+            jnp.broadcast_to(b[None, :, :], (m, k, n)).astype(jnp.int32))
+        pb = PlanePack.pack(b_exp, n_bits, signed=signed)
+        cur.charge_load(n_bits, pb.n_words)
     a_exp = jnp.zeros((m, k_pad, n), jnp.int32).at[:, :k, :].set(
         jnp.broadcast_to(a[:, :, None], (m, k, n)).astype(jnp.int32))
-    b_exp = jnp.zeros((m, k_pad, n), jnp.int32).at[:, :k, :].set(
-        jnp.broadcast_to(b[None, :, :], (m, k, n)).astype(jnp.int32))
+    pa = PlanePack.pack(a_exp, n_bits, signed=signed)
+    cur.charge_load(n_bits, pa.n_words)
+    if b_pack is not None:
+        cur.charge_resident(n_bits, pb.n_words)
 
-    prod = _multiply_with(cur, PlanePack.pack(a_exp, n_bits, signed=signed),
-                          PlanePack.pack(b_exp, n_bits, signed=signed))
+    prod = _multiply_with(cur, pa, pb)
     acc = _reduce_with(cur, prod, n_steps=planner._log2_ceil(k_pad))
 
     # k = 0 slice of each row: flat(m, 0, n) = m * K_pad * N + n
@@ -500,9 +560,10 @@ def _matmul_with(cur: ScheduleCursor, a: jax.Array, b: jax.Array,
     return acc.take_words(idx.reshape(-1), (m, n))
 
 
-def matmul(a: jax.Array, b: jax.Array, n_bits: int = 8,
+def matmul(a: jax.Array, b: Optional[jax.Array] = None, n_bits: int = 8,
            backend: Optional[str] = None,
-           spec: Optional[ArraySpec] = None, mesh=None) -> jax.Array:
+           spec: Optional[ArraySpec] = None, mesh=None,
+           b_pack: Optional[PlanePack] = None) -> jax.Array:
     """Exact intN x intN -> int32 matmul through the CiM array.
 
     a : int [M, K], b : int [K, N], entries representable in n_bits signed.
@@ -511,8 +572,24 @@ def matmul(a: jax.Array, b: jax.Array, n_bits: int = 8,
     contraction is (2*n_bits - 1) + ceil(log2 K) accesses regardless of M
     and N. Word-level parallelism is the CiM scaling argument; the operand
     broadcast is the (honest) cost of it.
+
+    With `b_pack` (a pinned `matmul_rhs_pack`; `b` may then be None) the
+    rhs is RESIDENT: the schedule names it so, the compiled program keys on
+    that residency, and only the lhs pays operand-load charges.
     """
     a = jnp.asarray(a)
+    if b_pack is not None:
+        m2, k_pad, n = b_pack.shape
+        sched = _place(planner.plan_matmul(k_pad, n, n_bits=n_bits,
+                                           signed=True, resident_rhs=True),
+                       spec, m2 * k_pad * n)
+
+        def body_res(cur, a_, bp):
+            return _matmul_with(cur, a_, None, n_bits, b_pack=bp).unpack()
+
+        return run_schedule_program(sched, body_res, (a, b_pack),
+                                    body_key=("matmul", n_bits, "resident"),
+                                    backend=backend, spec=spec, mesh=mesh)
     b = jnp.asarray(b)
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise CimOpError(f"matmul needs [M,K] x [K,N], got {a.shape} {b.shape}")
@@ -597,9 +674,11 @@ class ChainExecutor:
         return PlanePack(planes=acc.planes, n_bits=acc.n_bits,
                          signed=acc.signed, shape=())
 
-    def matmul(self, a: jax.Array, b: jax.Array, n_bits: int,
-               signed: bool = True) -> PlanePack:
-        return _matmul_with(self.cursor, a, b, n_bits, signed=signed)
+    def matmul(self, a: jax.Array, b, n_bits: int,
+               signed: bool = True,
+               b_pack: Optional[PlanePack] = None) -> PlanePack:
+        return _matmul_with(self.cursor, a, b, n_bits, signed=signed,
+                            b_pack=b_pack)
 
     def finish(self) -> None:
         self.cursor.finish()

@@ -59,6 +59,12 @@ class Schedule:
     `segments` (set by `concat_schedules`) records the per-op boundaries of
     a fused region plan: an ordered tuple of (macro name, step count) pairs
     summing to len(steps) — the lowering compiler's provenance trail.
+
+    `operands`/`resident` name the macro's operand sides and the subset
+    already pinned in array rows: a resident side skips the entry pack (and
+    its ledger load charges) when the schedule executes, and because
+    Schedule is part of every compiled-program cache key, two executions of
+    the same macro with different residency compile to different programs.
     """
 
     macro: str
@@ -66,6 +72,8 @@ class Schedule:
     out_bits: int                 # width of the macro's result planes
     placement: Optional[TilePlan] = None
     segments: Optional[Tuple[Tuple[str, int], ...]] = None
+    operands: Tuple[str, ...] = ()
+    resident: Tuple[str, ...] = ()
 
     @property
     def accesses(self) -> int:
@@ -81,6 +89,19 @@ class Schedule:
     def placed(self, spec: ArraySpec, n_words: int) -> "Schedule":
         """The same schedule carrying its tile placement on `spec`."""
         return dataclasses.replace(self, placement=spec.plan(n_words))
+
+    def with_operands(self, *names: str) -> "Schedule":
+        """The same schedule naming its operand sides (e.g. 'lhs', 'rhs')."""
+        return dataclasses.replace(self, operands=tuple(names))
+
+    def with_resident(self, *names: str) -> "Schedule":
+        """The same schedule marking `names` as resident operand sides."""
+        unknown = tuple(n for n in names if n not in self.operands)
+        if unknown:
+            raise opset.CimOpError(
+                f"resident sides {unknown} not among operands "
+                f"{self.operands} of macro {self.macro!r}")
+        return dataclasses.replace(self, resident=tuple(names))
 
     def op_passes(self) -> Tuple[Tuple[str, ...], ...]:
         return tuple(s.ops for s in self.steps)
@@ -190,17 +211,24 @@ def plan_reduce_sum(n_elems: int, stride: int = 1,
 
 
 def plan_matmul(k: int, n_cols: int, n_bits: int = 8,
-                signed: bool = True) -> Schedule:
+                signed: bool = True, resident_rhs: bool = False) -> Schedule:
     """int x int -> wide-int matmul over a [M, K_pad, N] broadcast layout:
     ONE shift-and-add multiply over the whole expanded tensor (word
     parallelism makes the access count independent of M and N) followed by a
-    log2(K_pad) stride-N tree reduction over the contraction axis."""
+    log2(K_pad) stride-N tree reduction over the contraction axis.
+
+    `resident_rhs` marks the rhs (weight) side as pinned in array rows: the
+    step sequence is identical — residency changes operand loading, never
+    the access count — but the schedule names the rhs resident so executors
+    skip its entry pack and compiled programs key on residency."""
     if k < 1 or n_cols < 1:
         raise opset.CimOpError(f"matmul needs k, n >= 1, got {k}, {n_cols}")
     k_pad = 1 << _log2_ceil(k)
     mul = plan_multiply(n_bits, n_bits, signed_b=signed)
     red = plan_reduce_sum(k_pad, stride=n_cols, n_bits=mul.out_bits)
-    return Schedule("matmul", mul.steps + red.steps, out_bits=red.out_bits)
+    sched = Schedule("matmul", mul.steps + red.steps, out_bits=red.out_bits,
+                     operands=("lhs", "rhs"))
+    return sched.with_resident("rhs") if resident_rhs else sched
 
 
 def plan_dot(k: int, n_bits: int = 8, signed: bool = True) -> Schedule:
@@ -266,10 +294,16 @@ def schedule_traffic_bytes(schedule: Schedule, n_bits: int, n_words32: int,
     baseline): each scheduled step re-reads its two operand stacks at the
     working width and writes its outputs back — the k-access analogue of the
     paper's two-access baseline, generalized to macro schedules.
+
+    A resident operand side streams ZERO bytes on the fused path (it already
+    lives in the array rows — the paper's stored-operand assumption); the
+    unfused baseline still re-reads both sides because near-memory compute
+    has no rows to keep state in.
     """
     w = working_bits if working_bits is not None else schedule.out_bits
     plane_bytes = 4 * n_words32
-    fused = (2 * n_bits + schedule.out_bits) * plane_bytes
+    streamed_sides = 2 - min(len(schedule.resident), 2)
+    fused = (streamed_sides * n_bits + schedule.out_bits) * plane_bytes
     baseline = 0.0
     for step in schedule.steps:
         out_rows = sum(opset.out_rows(op, w) for op in step.ops)

@@ -77,6 +77,16 @@ class ArchConfig:
     cim_mlp_bits: int = 0           # >0: dense MLPs run through the
     #                                 jaxpr->CiM lowering pass at this
     #                                 quantization width (serve --cim-lower)
+    cim_resident: bool = False      # pin int8 MLP weight planes in the
+    #                                 array's resident region across calls
+    #                                 (serve --cim-resident): warm decode
+    #                                 skips the weight-side entry pack
+    cim_unroll_groups: bool = False  # unroll the grouped-layer scan outside
+    #                                 training: per-layer params keep a
+    #                                 stable identity so eager serving can
+    #                                 charge (and pin) per call — the serve
+    #                                 engine sets this for BOTH sides of the
+    #                                 repack-vs-resident comparison
 
     # -- derived -----------------------------------------------------------
     @property

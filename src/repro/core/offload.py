@@ -98,6 +98,13 @@ class OffloadReport:
     adra_accesses: int = 0           # TOTAL planned accesses (single + multi):
     #                                  == the executed ledger count of one
     #                                  unbanked repro.cim.lower run (jaxpr src)
+    stream_load_accesses: int = 0    # operand row-write loads per call if every
+    #                                  operand streams in (UPPER BOUND: region
+    #                                  fusion memoizes entry packs, so the
+    #                                  executed ledger charge is <= this)
+    resident_savable_accesses: int = 0  # the slice of those loads a pinned
+    #                                  dot-rhs (repro.cim.lower resident mode)
+    #                                  removes from every warm call
     source: str = "hlo"
 
     @property
@@ -159,6 +166,8 @@ def analyze_trace(tr, scheme: str = "current", rows: int = 1024,
     adra_accesses = 0
     banked_accesses = 0
     bank_waves = 0
+    stream_loads = 0
+    resident_savable = 0
 
     def place(op_words: int, logical_accesses: int) -> None:
         nonlocal banked_accesses, bank_waves
@@ -170,6 +179,10 @@ def analyze_trace(tr, scheme: str = "current", rows: int = 1024,
 
     _HIST_NAMES = {"mul": "multiply", "dot_general": "dot",
                    "population_count": "popcount"}
+    # streamed-operand load estimate per op kind: how many fresh operand
+    # packs the region body would drive into rows if NOTHING were memoized
+    # (binary ops: 2, unary reductions: 1). An upper bound by construction.
+    _LOADS = {"reduce_sum": 1, "population_count": 1}
     for op in tr.ops:
         if not op.eligible or op.accesses == 0:
             continue                 # free peripherals do no array work
@@ -179,6 +192,10 @@ def analyze_trace(tr, scheme: str = "current", rows: int = 1024,
         name = _HIST_NAMES.get(op.name, op.name)
         hist[name] = hist.get(name, 0) + 1
         place(op.words, op.accesses)
+        stream_loads += _LOADS.get(op.name, 2)
+        if op.name == "dot_general":
+            # a pinnable rhs removes exactly its side of the dot's loads
+            resident_savable += 1
 
         if op.kind == "single":
             out_aval = aval_of(op.outvars[0])
@@ -245,6 +262,8 @@ def analyze_trace(tr, scheme: str = "current", rows: int = 1024,
         banked_accesses=banked_accesses,
         bank_waves=bank_waves,
         adra_accesses=adra_accesses,
+        stream_load_accesses=stream_loads,
+        resident_savable_accesses=resident_savable,
         source="jaxpr",
     )
 

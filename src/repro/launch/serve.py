@@ -1,116 +1,501 @@
-"""Batched serving driver: prefill + decode loop with greedy or ADRA
-(quantized in-memory comparison) sampling.
+"""Continuous-batching serve engine over the CiM-lowered model.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --preset reduced \
-      --batch 4 --prompt-len 32 --gen 16 --sampler adra
+      --slots 2 --requests 4 --prompt-len 8 --gen 8 --cim-lower --cim-resident
 
-`--cim-lower` routes every dense decode MLP through the jaxpr->CiM lowering
-compiler (repro.cim.lower): the MLP's quantized integer contractions
-execute as planned CiM access schedules (float gating/rescale stays on the
-host) and a ledger report after the request prints the charged accesses,
-the per-op histogram and the projected ADRA savings. Charge semantics (the
-report labels them): the jitted model path charges ONCE per compiled shape
-at trace time, while the eager ADRA sampler charges one access per
-tournament level per invocation — so the totals describe the programs
-compiled-and-run for this request, not a per-token traffic recount.
+The engine holds `slots` concurrent sequences in one batched KV cache.
+Requests enter a queue with arrival times; each loop iteration admits at
+most one due request (a batch-1 prefill, inserted into its slot between
+decode steps — prefill and decode interleave, vLLM-style) and then runs ONE
+full-batch decode step for every in-flight sequence. Retired sequences free
+their slot and their paged KV blocks immediately, so the next queued
+request starts without draining the batch.
+
+Timing discipline: every prefill and decode step is bracketed by
+`jax.block_until_ready` + perf_counter, so a step's latency is the real
+device time, not dispatch time. Steady-state tok/s and the p50/p99
+per-token latencies EXCLUDE prefill and the first `--warmup-steps` decode
+steps (compile happens there); prefill cost is reported separately per
+request (`prefill_ms`).
+
+Charge semantics with --cim-lower: the decode step runs UNJITTED (the
+grouped-layer scan is unrolled, see ArchConfig.cim_unroll_groups) so every
+step's lowered MLP regions charge the ledger per call — `accesses` is the
+compute bill, `load_accesses` the streamed-operand row-write bill. The
+jitted prefill still charges once at trace time (labeled: it lands on the
+first request). Per-request attribution splits each decode step's ledger
+delta evenly across the slots active in that step.
+
+--cim-resident pins the int8 MLP weight planes in the arrays' resident
+rows (repro.cim.lower resident mode): warm decode steps charge ZERO loads
+for the weight side. The --cim-lower bench mode runs the SAME request
+schedule twice — streamed repack, then resident — and asserts the resident
+phase's total accesses/token is strictly lower at identical compute
+accesses/token; --assert-warm replays the resident phase and asserts no
+program-cache misses and no new pins (everything stayed warm).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json as json_lib
 import time
+from collections import deque
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.launch.paged_kv import PagedKV
 from repro.launch.train import preset_config
 from repro.models import build
-from repro.train import adra_sample, greedy_sample, make_decode_step, make_prefill_step
+from repro.train import (adra_sample, greedy_sample, make_decode_step,
+                         make_prefill_step)
 
 
-def _print_cim_report(n_requests: int) -> None:
-    from repro.cim import cache_stats, ledger
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
 
-    led = ledger()
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One queued generation job and its measured lifecycle."""
+
+    rid: int
+    prompt_len: int
+    gen: int                       # tokens to produce (incl. the prefill one)
+    arrival_s: float = 0.0
+    slot: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    prefill_ms: float = 0.0
+    first_token_s: float = -1.0
+    done_s: float = -1.0
+    accesses: float = 0.0          # ledger attribution (see module docstring)
+    load_accesses: float = 0.0
+    token_latencies_ms: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.gen
+
+    def report(self) -> Dict[str, Any]:
+        return {
+            "rid": self.rid,
+            "arrival_s": round(self.arrival_s, 6),
+            "first_token_s": round(self.first_token_s, 6),
+            "done_s": round(self.done_s, 6),
+            "prefill_ms": round(self.prefill_ms, 3),
+            "tokens": len(self.tokens),
+            "accesses": round(self.accesses, 3),
+            "load_accesses": round(self.load_accesses, 3),
+            "total_accesses": round(self.accesses + self.load_accesses, 3),
+        }
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    i = min(len(ys) - 1, max(0, int(round(q / 100.0 * (len(ys) - 1)))))
+    return ys[i]
+
+
+def _ledger():
+    from repro.cim import ledger
+    return ledger()
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class ServeEngine:
+    """Slot-based continuous batching over one batched cache pytree."""
+
+    def __init__(self, model, params, slots: int, max_len: int,
+                 sampler: str = "greedy", cim_lower: bool = False,
+                 paged: Optional[PagedKV] = None, warmup_steps: int = 1,
+                 seed: int = 0):
+        self.model, self.params, self.cfg = model, params, model.cfg
+        self.slots, self.max_len = int(slots), int(max_len)
+        self.sample = greedy_sample if sampler == "greedy" else adra_sample
+        self.cim_lower = cim_lower
+        self.paged = paged
+        self.warmup_steps = int(warmup_steps)
+        self.key = jax.random.PRNGKey(seed)
+        self.prefill_fn = jax.jit(make_prefill_step(model, max_len))
+        dec = make_decode_step(model)
+        # unjitted with --cim-lower: lowered regions then execute (and
+        # charge) per call, which is what residency accelerates
+        self.decode_fn = dec if cim_lower else \
+            jax.jit(dec, donate_argnums=(1,))
+        self._insert = jax.jit(self._insert_slot)
+
+    @staticmethod
+    def _insert_slot(batched, single, slot):
+        """Land a batch-1 cache pytree in slot `slot` of the batched one.
+        The batch axis of each leaf is the first axis where the two shapes
+        disagree (leading group axes make it leaf-dependent)."""
+        def one(b, s):
+            ax = 0
+            for i, (db, ds) in enumerate(zip(b.shape, s.shape)):
+                if db != ds:
+                    ax = i
+                    break
+            return jax.lax.dynamic_update_slice_in_dim(
+                b, s.astype(b.dtype), slot, axis=ax)
+        return jax.tree.map(one, batched, single)
+
+    # -- inputs --------------------------------------------------------------
+
+    def _prompt_inputs(self, req: ServeRequest) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        k = jax.random.fold_in(self.key, req.rid)
+        if cfg.embed_stub:
+            return {"embeds": jax.random.normal(
+                k, (1, req.prompt_len, cfg.d_model)) * 0.02}
+        return {"tokens": jax.random.randint(
+            k, (1, req.prompt_len), 0, cfg.vocab_size)}
+
+    def _step_inputs(self, tok, positions, step: int) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        pos = jnp.asarray(positions, jnp.int32)
+        if cfg.embed_stub:
+            return {"embeds": jax.random.normal(
+                jax.random.fold_in(self.key, 10_000 + step),
+                (self.slots, 1, cfg.d_model)) * 0.02,
+                "positions": pos}
+        return {"tokens": tok[:, None], "positions": pos}
+
+    # -- run -----------------------------------------------------------------
+
+    def run(self, requests: List[ServeRequest]) -> Dict[str, Any]:
+        led = _ledger()
+        pending = deque(sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
+        active: Dict[int, ServeRequest] = {}
+        free = list(range(self.slots))
+        caches = self.model.init_caches(self.slots, self.max_len)
+        tok = jnp.zeros((self.slots,), jnp.int32)
+        positions = [0] * self.slots
+        decode_steps = 0
+        steady_tokens = 0
+        steady_time = 0.0
+        token_lat_ms: List[float] = []
+        t0 = time.perf_counter()
+
+        def now() -> float:
+            return time.perf_counter() - t0
+
+        while pending or active:
+            # admit at most one due request per iteration: prefill
+            # interleaves with decode instead of draining the batch
+            if pending and free and pending[0].arrival_s <= now():
+                req = pending[0]
+                if self.paged is not None and \
+                        not self.paged.alloc(req.rid, req.prompt_len):
+                    if not active:
+                        raise RuntimeError(
+                            f"request {req.rid}: prompt of {req.prompt_len} "
+                            f"tokens cannot fit the KV block pool even with "
+                            f"every slot idle")
+                    # pool pressure: wait for a retirement to free blocks
+                else:
+                    pending.popleft()
+                    slot = free.pop(0)
+                    req.slot = slot
+                    ta = time.perf_counter()
+                    l0 = (led.accesses, led.load_accesses)
+                    c1, logits1 = self.prefill_fn(self.params,
+                                                  self._prompt_inputs(req))
+                    jax.block_until_ready(logits1)
+                    req.prefill_ms = (time.perf_counter() - ta) * 1e3
+                    req.accesses += led.accesses - l0[0]
+                    req.load_accesses += led.load_accesses - l0[1]
+                    caches = self._insert(caches, c1, slot)
+                    first = self.sample(logits1)[0]
+                    tok = tok.at[slot].set(first)
+                    req.tokens.append(int(first))
+                    req.first_token_s = now()
+                    positions[slot] = req.prompt_len
+                    active[slot] = req
+                    if req.done:                       # gen == 1
+                        self._retire(req, free, active, now())
+                    continue                           # admit before decode
+
+            if not active:
+                if pending:
+                    time.sleep(max(0.0, pending[0].arrival_s - now()))
+                continue
+
+            # one full-batch decode step
+            step_in = self._step_inputs(tok, positions, decode_steps)
+            ts = time.perf_counter()
+            l0 = (led.accesses, led.load_accesses)
+            caches, logits = self.decode_fn(self.params, caches, step_in)
+            jax.block_until_ready((caches, logits))
+            dt = time.perf_counter() - ts
+            d_acc = led.accesses - l0[0]
+            d_load = led.load_accesses - l0[1]
+            tok = self.sample(logits)
+            n_active = len(active)
+            decode_steps += 1
+            steady = decode_steps > self.warmup_steps
+            if steady:
+                steady_tokens += n_active
+                steady_time += dt
+            for slot, req in list(active.items()):
+                req.tokens.append(int(tok[slot]))
+                req.accesses += d_acc / n_active
+                req.load_accesses += d_load / n_active
+                req.token_latencies_ms.append(dt * 1e3)
+                if steady:
+                    token_lat_ms.append(dt * 1e3)
+                positions[slot] += 1
+                if self.paged is not None:
+                    self.paged.extend(req.rid)
+                if req.done:
+                    self._retire(req, free, active, now())
+
+        total_tokens = sum(len(r.tokens) for r in requests)
+        decode_tokens = total_tokens - len(requests)    # first token: prefill
+        report: Dict[str, Any] = {
+            "slots": self.slots,
+            "requests": len(requests),
+            "total_tokens": total_tokens,
+            "decode_tokens": decode_tokens,
+            "decode_steps": decode_steps,
+            "warmup_steps": self.warmup_steps,
+            "wall_s": round(now(), 4),
+            "tok_s_steady": round(steady_tokens / steady_time, 2)
+            if steady_time > 0 else 0.0,
+            "steady_tokens": steady_tokens,
+            "p50_ms": round(_percentile(token_lat_ms, 50), 3),
+            "p99_ms": round(_percentile(token_lat_ms, 99), 3),
+            "prefill_ms_mean": round(
+                sum(r.prefill_ms for r in requests) / max(1, len(requests)),
+                3),
+            "per_request": [r.report() for r in requests],
+        }
+        if self.paged is not None:
+            st = self.paged.stats()
+            report["kv"] = {
+                "n_blocks": st.n_blocks, "block_tokens": st.block_tokens,
+                "peak_blocks": st.peak_blocks,
+                "failed_allocs": st.failed_allocs,
+                "utilization_peak": round(st.peak_blocks
+                                          / max(1, st.n_blocks), 4),
+            }
+        if self.cim_lower:
+            led = _ledger()
+            per_tok = max(1, decode_tokens)
+            report["ledger"] = {
+                "accesses": led.accesses,
+                "load_accesses": led.load_accesses,
+                "total_accesses": led.total_accesses,
+                "resident_reuses": led.resident_reuses,
+            }
+            report["accesses_per_token"] = round(led.accesses / per_tok, 4)
+            report["load_accesses_per_token"] = round(
+                led.load_accesses / per_tok, 4)
+            report["total_accesses_per_token"] = round(
+                led.total_accesses / per_tok, 4)
+        return report
+
+    def _retire(self, req: ServeRequest, free, active, t: float) -> None:
+        req.done_s = t
+        if req.slot in active:
+            del active[req.slot]
+        free.append(req.slot)
+        free.sort()
+        if self.paged is not None:
+            self.paged.free(req.rid)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def _requests(args) -> List[ServeRequest]:
+    return [ServeRequest(rid=i, prompt_len=args.prompt_len, gen=args.gen,
+                         arrival_s=i * args.arrival_interval)
+            for i in range(args.requests)]
+
+
+def _fresh_cim_state() -> None:
+    from repro.cim import clear_schedule_cache
+    from repro.cim.array import clear_resident
+    _ledger().reset()
+    clear_resident()
+    clear_schedule_cache()
+
+
+def _serve_once(model, params, args) -> Dict[str, Any]:
+    cfg = model.cfg
+    spec = None
+    rs = None
+    if args.cim_lower:
+        from repro.cim.array import DEFAULT_SPEC, resident_set
+        spec = DEFAULT_SPEC
+        rs = resident_set(spec)
+    paged = PagedKV.for_model(cfg, spec=spec, slots=args.slots,
+                              max_len=args.prompt_len + args.gen,
+                              resident_set=rs)
+    engine = ServeEngine(model, params, slots=args.slots,
+                         max_len=args.prompt_len + args.gen,
+                         sampler=args.sampler, cim_lower=args.cim_lower,
+                         paged=paged, warmup_steps=args.warmup_steps)
+    return engine.run(_requests(args))
+
+
+def _print_cim_report(tag: str) -> None:
+    from repro.cim import cache_stats
+
+    led = _ledger()
     proj = led.projected()
     hist = ", ".join(f"{k}:{v}" for k, v in sorted(led.per_op.items()))
-    print(f"cim-lower ledger (request {n_requests}): "
-          f"{led.accesses} accesses, {led.words32:.0f} word32-ops")
-    print("  (jitted MLP regions charge once per compiled shape at trace "
-          "time; eager sampler levels charge per invocation)")
+    print(f"cim-lower ledger ({tag}): {led.accesses} compute accesses + "
+          f"{led.load_accesses} streamed loads = {led.total_accesses} total, "
+          f"{led.resident_reuses} resident reuses, "
+          f"{led.words32:.0f} word32-ops")
     print(f"  per-op: {hist}")
     print(f"  projected: {proj['edp_decrease_pct']:.1f}% EDP decrease, "
           f"{proj['energy_saved_fj']:.0f} fJ saved vs near-memory "
           f"(current sensing @1024^2)")
     cs = cache_stats()
-    print(f"  schedule cache: {cs['hits']} hits / {cs['misses']} misses / "
-          f"{cs['evictions']} evictions (capacity {cs['capacity']}), "
-          f"{cs['dispatches']} jitted dispatches (one per warm macro/region)")
+    print(f"  schedule cache: {cs['hits']} hits / {cs['misses']} misses, "
+          f"{cs['dispatches']} jitted dispatches; resident: "
+          f"{cs.get('resident_pins', 0)} pins / "
+          f"{cs.get('resident_hits', 0)} hits / "
+          f"{cs.get('resident_evictions', 0)} evictions, "
+          f"{cs.get('resident_rows', 0)} rows held")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b")
-    ap.add_argument("--preset", default="reduced", choices=("reduced", "100m", "full"))
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--preset", default="reduced",
+                    choices=("reduced", "100m", "full"))
+    ap.add_argument("--slots", "--batch", type=int, default=4,
+                    dest="slots", help="concurrent sequences in the batch")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="queued requests (default: one per slot)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--arrival-interval", type=float, default=0.0,
+                    help="seconds between request arrivals (0: all at once)")
+    ap.add_argument("--warmup-steps", type=int, default=1,
+                    help="decode steps excluded from steady-state metrics")
     ap.add_argument("--sampler", default="greedy", choices=("greedy", "adra"))
+    ap.add_argument("--json", default="",
+                    help="write the serve report to this JSON file")
     ap.add_argument("--cim-lower", action="store_true",
-                    help="serve the quantized decode MLP through the "
-                         "jaxpr->CiM lowering compiler and print a "
-                         "per-request ledger report")
+                    help="run decode MLPs through the jaxpr->CiM lowering "
+                         "compiler (unjitted decode, per-call ledger) and "
+                         "bench streamed-repack vs resident-weight phases")
     ap.add_argument("--cim-bits", type=int, default=8,
                     help="quantization width for --cim-lower (default 8)")
+    ap.add_argument("--cim-resident", action="store_true",
+                    help="pin int8 MLP weight planes in array rows "
+                         "(with --cim-lower: also run the repack/resident "
+                         "comparison)")
+    ap.add_argument("--assert-warm", action="store_true",
+                    help="replay the resident phase and fail unless every "
+                         "program and pin stayed warm")
     args = ap.parse_args()
+    if args.requests <= 0:
+        args.requests = args.slots
 
     cfg = preset_config(args.arch, args.preset)
     if args.cim_lower:
-        cfg = dataclasses.replace(cfg, cim_mlp_bits=args.cim_bits)
+        cfg = dataclasses.replace(cfg, cim_mlp_bits=args.cim_bits,
+                                  cim_unroll_groups=True)
+    if args.cim_resident and not args.cim_lower:
+        cfg = dataclasses.replace(cfg, cim_resident=True)
     model = build(cfg)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
-    max_len = args.prompt_len + args.gen
+    params = model.init(jax.random.PRNGKey(0))
 
-    sample = greedy_sample if args.sampler == "greedy" else adra_sample
-    prefill = jax.jit(make_prefill_step(model, max_len))
-    decode = jax.jit(make_decode_step(model), donate_argnums=(1,))
+    out: Dict[str, Any] = {
+        "bench": "serve", "arch": args.arch, "preset": args.preset,
+        "slots": args.slots, "requests": args.requests,
+        "prompt_len": args.prompt_len, "gen": args.gen,
+        "sampler": args.sampler,
+        "cim": {"lower": bool(args.cim_lower), "bits": args.cim_bits,
+                "resident": bool(args.cim_resident)},
+    }
 
-    if args.cim_lower:
-        from repro.cim import ledger
-
-        ledger().reset()
-
-    B = args.batch
-    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
-    if cfg.embed_stub:
-        emb = jax.random.normal(key, (B, args.prompt_len, cfg.d_model)) * 0.02
-        caches, logits = prefill(params, {"embeds": emb})
+    if not args.cim_lower:
+        rep = _serve_once(model, params, args)
+        out.update(rep)
+        print(f"served {rep['requests']} requests / "
+              f"{rep['total_tokens']} tokens in {rep['wall_s']:.2f}s: "
+              f"{rep['tok_s_steady']:.1f} tok/s steady, "
+              f"p50 {rep['p50_ms']:.1f} ms, p99 {rep['p99_ms']:.1f} ms")
     else:
-        caches, logits = prefill(params, {"tokens": prompts})
+        # one model per phase, built ONCE: the resident model's memoized
+        # param slices must keep their identity for the warm replay
+        model_resident = build(dataclasses.replace(cfg, cim_resident=True))
+        # phase 1: streamed repack — every decode step re-packs the weights
+        _fresh_cim_state()
+        repack = _serve_once(model, params, args)
+        _print_cim_report("repack")
+        # phase 2: resident — weight planes pinned at first touch
+        _fresh_cim_state()
+        resident = _serve_once(model_resident, params, args)
+        _print_cim_report("resident")
 
-    out_tokens = []
-    tok = sample(logits)
-    out_tokens.append(tok)
-    t0 = time.monotonic()
-    for t in range(args.prompt_len, max_len - 1):
-        pos = jnp.full((B,), t, jnp.int32)
-        if cfg.embed_stub:
-            step_in = {"embeds": jax.random.normal(
-                jax.random.fold_in(key, t), (B, 1, cfg.d_model)) * 0.02,
-                "positions": pos}
-        else:
-            step_in = {"tokens": tok[:, None], "positions": pos}
-        caches, logits = decode(params, caches, step_in)
-        tok = sample(logits)
-        out_tokens.append(tok)
-    dt = time.monotonic() - t0
-    gen = jnp.stack(out_tokens, axis=1)
-    print(f"sampler={args.sampler}  generated {gen.shape} tokens "
-          f"in {dt:.2f}s ({B * (len(out_tokens)-1) / max(dt, 1e-9):.1f} tok/s)")
-    print("first sequence:", jax.device_get(gen[0])[:16], "...")
-    if args.cim_lower:
-        _print_cim_report(n_requests=1)
+        assert resident["accesses_per_token"] == repack["accesses_per_token"], \
+            (f"compute accesses/token must not change with residency: "
+             f"{resident['accesses_per_token']} != "
+             f"{repack['accesses_per_token']}")
+        assert resident["total_accesses_per_token"] \
+            < repack["total_accesses_per_token"], \
+            (f"resident serving must charge strictly fewer total "
+             f"accesses/token: {resident['total_accesses_per_token']} !< "
+             f"{repack['total_accesses_per_token']}")
+        assert resident["ledger"]["resident_reuses"] > 0
+
+        if args.assert_warm:
+            from repro.cim import cache_stats
+            cs0 = cache_stats()
+            warm = _serve_once(model_resident, params, args)
+            cs1 = cache_stats()
+            miss_delta = cs1["misses"] - cs0["misses"]
+            pin_delta = cs1.get("resident_pins", 0) \
+                - cs0.get("resident_pins", 0)
+            assert miss_delta == 0, \
+                f"warm replay compiled {miss_delta} new programs"
+            assert pin_delta == 0, \
+                f"warm replay re-pinned {pin_delta} resident operands"
+            assert warm["tok_s_steady"] > 0
+            out["warm_replay"] = {
+                "tok_s_steady": warm["tok_s_steady"],
+                "program_cache_miss_delta": miss_delta,
+                "resident_pin_delta": pin_delta,
+            }
+            print(f"warm replay: {warm['tok_s_steady']:.1f} tok/s, "
+                  f"0 new programs, 0 new pins")
+
+        ratio = resident["tok_s_steady"] / max(1e-9, repack["tok_s_steady"])
+        out["phases"] = {"repack": repack, "resident": resident}
+        out["tok_s_resident_vs_repack_ratio"] = round(ratio, 4)
+        # promote the resident phase's per-token bill to the top level:
+        # the quantities check_regression gates as never-grow counters
+        for k in ("accesses_per_token", "load_accesses_per_token",
+                  "total_accesses_per_token", "tok_s_steady", "p50_ms",
+                  "p99_ms"):
+            out[k] = resident[k]
+        print(f"resident vs repack: {resident['tok_s_steady']:.1f} vs "
+              f"{repack['tok_s_steady']:.1f} tok/s (x{ratio:.2f}), "
+              f"total accesses/token {resident['total_accesses_per_token']} "
+              f"vs {repack['total_accesses_per_token']}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json_lib.dump(out, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -56,7 +56,8 @@ def _apply_mlp(cfg: ArchConfig, p: Params, h):
     """Dense-MLP dispatch: the jaxpr->CiM lowered quantized path when the
     config opts in (cim_mlp_bits > 0), the plain dense path otherwise."""
     if cfg.cim_mlp_bits:
-        return mlp_cim(p, h, cfg.gating, n_bits=cfg.cim_mlp_bits)
+        return mlp_cim(p, h, cfg.gating, n_bits=cfg.cim_mlp_bits,
+                       resident=cfg.cim_resident)
     return mlp(p, h, cfg.gating)
 
 
@@ -207,6 +208,10 @@ class Model:
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
         self.layout = StackLayout.from_config(cfg)
+        # memoized per-group param slices for the unrolled (resident) stack:
+        # the SAME jax.Arrays must be handed to every call so the lowered
+        # MLPs' identity fingerprints stay warm across decode steps
+        self._group_slices: Dict[int, Tuple[Any, list]] = {}
 
     # -- init ---------------------------------------------------------------
 
@@ -335,9 +340,28 @@ class Model:
                 params["groups"],
                 caches["groups"] if caches is not None else None,
             )
-            (x, aux_total), group_caches_new = jax.lax.scan(
-                body, (x, aux_total), xs)
-            new_caches["groups"] = group_caches_new
+            # resident serving unrolls the group scan: inside lax.scan the
+            # per-layer params are Tracers, whose identity is per-trace, so
+            # the lowered MLPs could never hold a warm pin. The unrolled
+            # path hands each layer the SAME memoized param slice every
+            # call (train keeps the scan: remat + compile time matter more)
+            if (cfg.cim_resident or cfg.cim_unroll_groups) \
+                    and mode != "train":
+                carry = (x, aux_total)
+                ncs_stacked = []
+                slices = self._group_param_slices(params["groups"])
+                for g, gp in enumerate(slices):
+                    gc = (jax.tree.map(lambda a: a[g], caches["groups"])
+                          if caches is not None else None)
+                    carry, ncs = body(carry, (gp, gc))
+                    ncs_stacked.append(ncs)
+                x, aux_total = carry
+                new_caches["groups"] = jax.tree.map(
+                    lambda *xs_: jnp.stack(xs_), *ncs_stacked)
+            else:
+                (x, aux_total), group_caches_new = jax.lax.scan(
+                    body, (x, aux_total), xs)
+                new_caches["groups"] = group_caches_new
 
         base = lay.n_first_dense + lay.n_groups * period
         for r in range(lay.n_rem):
@@ -349,6 +373,21 @@ class Model:
 
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         return x, aux_total, new_caches
+
+    def _group_param_slices(self, groups):
+        """Per-group views of the stacked group params, built ONCE per
+        params object and reused verbatim thereafter — the stability the
+        resident fingerprints (id-based, see repro.cim.lower) depend on.
+        The cache entry keeps a strong reference to the keyed object so a
+        recycled id() can never alias a dead pytree."""
+        key = id(groups)
+        hit = self._group_slices.get(key)
+        if hit is not None and hit[0] is groups:
+            return hit[1]
+        slices = [jax.tree.map(lambda a: a[g], groups)
+                  for g in range(self.layout.n_groups)]
+        self._group_slices[key] = (groups, slices)
+        return slices
 
     # -- public paths -----------------------------------------------------------
 

@@ -2,13 +2,17 @@
 import pytest
 
 from repro.cim.accounting import LEDGER
+from repro.cim.array import clear_resident
 
 
 @pytest.fixture(autouse=True)
 def _reset_cim_ledger():
-    """The engine charges a process-wide ledger; reset it around every test
-    so access-count assertions can never leak across tests (and a test that
-    forgets to reset cannot poison a later one)."""
+    """The engine charges a process-wide ledger and pins into process-wide
+    resident sets; reset both around every test so access counts and pinned
+    rows can never leak across tests (and a test that forgets to reset
+    cannot poison a later one)."""
     LEDGER.reset()
+    clear_resident()
     yield
     LEDGER.reset()
+    clear_resident()

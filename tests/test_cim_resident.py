@@ -1,0 +1,275 @@
+"""Resident-operand contract tests (repro.cim.array.ResidentSet + the
+lowering compiler's resident mode).
+
+The contract under test:
+
+  * pin / get / evict lifecycle — LRU eviction under row pressure,
+    fingerprint invalidation, non-evictable reservations, counters;
+  * the combined row budget — `ArraySpec.check_fits` charges resident
+    occupancy against the same rows the access planes need;
+  * the charge model — residency removes ONLY the streamed-operand load
+    charges; compute `accesses` match the plan exactly as without it;
+  * bit-exactness — resident and per-call-repacked executions return the
+    SAME arrays on every portable CPU backend;
+  * program-cache separation — streamed and resident executions of one
+    region never share a compiled program.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cim import CimOpError, PlanePack, clear_resident, macro
+from repro.cim import dispatch
+from repro.cim.accounting import LEDGER
+from repro.cim.array import ArraySpec, ResidentSet, resident_set
+from repro.cim.lower import lower
+from repro.models import layers
+
+PORTABLE = ("jnp-boolean", "pallas-interpret")
+
+SPEC = ArraySpec(banks=2, subarrays=1, rows=64, bitline_words=32)
+
+
+def _pack(n_words: int, n_bits: int = 8, seed: int = 0) -> PlanePack:
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-100, 100, size=(n_words,), dtype=np.int32)
+    return PlanePack.pack(jnp.asarray(a), n_bits, signed=True)
+
+
+# ---------------------------------------------------------------------------
+# ResidentSet lifecycle
+# ---------------------------------------------------------------------------
+
+
+class TestResidentSet:
+    def test_pin_get_hit(self):
+        rs = ResidentSet(SPEC)
+        p = _pack(8)
+        rs.pin("w", p, fingerprint=(1,))
+        e = rs.get("w", fingerprint=(1,))
+        assert e is not None and e.pack is p
+        assert rs.hits == 1 and rs.misses == 0
+
+    def test_get_miss_counts(self):
+        rs = ResidentSet(SPEC)
+        assert rs.get("absent") is None
+        assert rs.misses == 1
+
+    def test_peek_counts_nothing(self):
+        rs = ResidentSet(SPEC)
+        rs.pin("w", _pack(8), fingerprint=(1,))
+        assert rs.peek("w", (1,))
+        assert not rs.peek("w", (2,))
+        assert not rs.peek("absent")
+        assert rs.hits == 0 and rs.misses == 0
+
+    def test_fingerprint_mismatch_invalidates(self):
+        rs = ResidentSet(SPEC)
+        rs.pin("w", _pack(8), fingerprint=(1,))
+        assert rs.get("w", fingerprint=(2,)) is None
+        assert rs.invalidations == 1
+        assert len(rs) == 0                      # stale rows released
+
+    def test_lru_eviction_under_pressure(self):
+        # 8-bit two-tile packs land 8 plane rows on EACH bank, so the
+        # 64-row banks hold 8 pins; further pins evict in LRU order
+        rs = ResidentSet(SPEC)
+        n_fit = SPEC.rows // 8
+        for i in range(n_fit + 2):
+            rs.pin(("w", i), _pack(2 * SPEC.tile_words, seed=i))
+        assert rs.evictions >= 2
+        assert rs.get(("w", 0)) is None          # oldest went first
+        assert rs.get(("w", n_fit + 1)) is not None
+
+    def test_oversize_pin_raises_with_occupancy(self):
+        rs = ResidentSet(SPEC, reserve_rows=32)
+        with pytest.raises(CimOpError, match="resident budget"):
+            rs.pin("big", _pack(64 * SPEC.tile_words, n_bits=8))
+
+    def test_reserve_is_not_evictable(self):
+        rs = ResidentSet(SPEC)
+        per_bank = SPEC.rows                     # fill bank 0 exactly
+        rs.reserve(("kv", 0), per_bank, bank=0)
+        with pytest.raises(CimOpError, match="reservation"):
+            # a same-bank pin cannot evict the reservation
+            rs.pin("w", _pack(SPEC.tile_words))
+        assert rs.evictions == 0
+
+    def test_release_and_clear(self):
+        rs = ResidentSet(SPEC)
+        rs.pin("w", _pack(8))
+        assert rs.release("w") and not rs.release("w")
+        rs.pin("v", _pack(8))
+        rs.clear()
+        assert len(rs) == 0 and rs.resident_rows == 0
+
+    def test_repin_replaces(self):
+        rs = ResidentSet(SPEC)
+        rs.pin("w", _pack(8, seed=0), fingerprint=(1,))
+        p2 = _pack(8, seed=1)
+        rs.pin("w", p2, fingerprint=(2,))
+        assert len(rs) == 1
+        assert rs.get("w", fingerprint=(2,)).pack is p2
+
+    def test_pin_charges_load_once(self):
+        LEDGER.reset()
+        rs = ResidentSet(SPEC)
+        p = _pack(8)
+        rs.pin("w", p)
+        assert LEDGER.load_accesses == SPEC.plan(p.n_words).n_tiles
+        rs.get("w")
+        assert LEDGER.load_accesses == SPEC.plan(p.n_words).n_tiles
+
+
+# ---------------------------------------------------------------------------
+# combined row budget
+# ---------------------------------------------------------------------------
+
+
+class TestCheckFits:
+    def test_resident_occupancy_in_budget(self):
+        spec = ArraySpec(rows=64)
+        spec.check_fits(8, ("add",), resident_rows=30)  # 16+9+30 <= 64
+        with pytest.raises(CimOpError, match="resident"):
+            spec.check_fits(8, ("add",), resident_rows=48)
+
+    def test_registry_occupancy_reaches_dispatch(self):
+        clear_resident()
+        rs = resident_set(SPEC)
+        rs.reserve(("kv", 0), 40, bank=0)
+        with pytest.raises(CimOpError, match="resident"):
+            # a 16-bit add needs 2*16+17 = 49 rows — fine on an empty
+            # array, impossible beside the 40 reserved rows
+            dispatch.execute_tiled(
+                _pack(SPEC.tile_words, n_bits=16),
+                _pack(SPEC.tile_words, n_bits=16, seed=1),
+                ("add",), spec=SPEC)
+        clear_resident()
+
+
+# ---------------------------------------------------------------------------
+# charge model: residency removes loads ONLY
+# ---------------------------------------------------------------------------
+
+
+def _ledger_delta(fn):
+    a0, l0, r0 = LEDGER.accesses, LEDGER.load_accesses, LEDGER.resident_reuses
+    out = fn()
+    return out, (LEDGER.accesses - a0, LEDGER.load_accesses - l0,
+                 LEDGER.resident_reuses - r0)
+
+
+class TestResidentCharges:
+    def test_macro_matmul_resident_rhs(self):
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.integers(-50, 50, (4, 16), dtype=np.int32))
+        b = jnp.asarray(rng.integers(-50, 50, (16, 8), dtype=np.int32))
+        ref = np.asarray(a) @ np.asarray(b)
+
+        plain, d_plain = _ledger_delta(lambda: macro.matmul(a, b, 8))
+        bp = macro.matmul_rhs_pack(b, a.shape[0], 8)
+        res, d_res = _ledger_delta(lambda: macro.matmul(a, b_pack=bp, n_bits=8))
+
+        np.testing.assert_array_equal(np.asarray(plain), ref)
+        np.testing.assert_array_equal(np.asarray(res), ref)
+        assert d_plain[0] == d_res[0]            # identical compute accesses
+        assert d_plain[1] == 2 and d_res[1] == 1  # rhs load gone
+        assert d_plain[2] == 0 and d_res[2] == 1  # one reuse charged
+
+    def test_lowered_warm_call_drops_loads_only(self):
+        clear_resident()
+        dispatch.clear_schedule_cache()
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+
+        # streamed per-call baseline
+        layers.cim_linear(x, w, n_bits=8)        # trace+first call
+        _, d_stream = _ledger_delta(lambda: layers.cim_linear(x, w, n_bits=8))
+
+        # resident: cold pins, then warm
+        layers.cim_linear(x, w, n_bits=8, resident=True)
+        _, d_warm = _ledger_delta(
+            lambda: layers.cim_linear(x, w, n_bits=8, resident=True))
+        assert d_warm[0] == d_stream[0]          # plan accesses untouched
+        assert d_warm[1] < d_stream[1]           # strictly fewer loads
+        assert d_warm[2] >= 1
+        clear_resident()
+
+    def test_schedule_resident_names(self):
+        from repro.cim import planner
+        s = planner.plan_matmul(16, 8, resident_rhs=True)
+        assert s.operands == ("lhs", "rhs") and s.resident == ("rhs",)
+        with pytest.raises(CimOpError):
+            planner.plan_matmul(16, 8).with_resident("nope")
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness + program-cache separation
+# ---------------------------------------------------------------------------
+
+
+def _quant_linear(x, w):
+    # same shape as layers._quantized_linear: float quantize on the host,
+    # the EXACT int8 contraction is the CiM-eligible eqn
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-9)
+    wq = jnp.clip(jnp.round(w / scale * 127), -127, 127).astype(jnp.int8)
+    xq = jnp.clip(jnp.round(x * 8), -127, 127).astype(jnp.int8)
+    y = jax.lax.dot_general(xq, wq, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.int32)
+    return y.astype(jnp.float32) * scale
+
+
+class TestLoweredResident:
+    @pytest.mark.parametrize("backend", PORTABLE)
+    def test_bit_exact_resident_vs_repack(self, backend):
+        clear_resident()
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+        ref = np.asarray(lower(_quant_linear, backend=backend)(x, w))
+        lf = lower(_quant_linear, backend=backend, resident_argnums=(1,))
+        cold = np.asarray(lf(x, w))
+        warm = np.asarray(lf(x, w))
+        np.testing.assert_array_equal(cold, ref)
+        np.testing.assert_array_equal(warm, ref)
+        clear_resident()
+
+    def test_residency_planning_classifies_rhs(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+        lf = lower(_quant_linear, resident_argnums=(1,))
+        lf(x, w)                                  # trace + cold pin
+        comp = lf.trace(x, w)
+        kinds = [(ra.ai, ra.kind) for r in comp.regions for ra in r.resident]
+        assert kinds, "weight-derived region input must be resident-planned"
+        assert all(k == "matmul_rhs" for _, k in kinds)
+        # host eqns that only quantize the pinned weights skip when warm
+        assert comp._warm_skip
+
+    def test_program_cache_keys_differ(self):
+        clear_resident()
+        dispatch.clear_schedule_cache()
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+        lower(_quant_linear)(x, w)
+        m_streamed = dispatch.cache_stats()["misses"]
+        lf = lower(_quant_linear, resident_argnums=(1,))
+        lf(x, w)
+        m_resident = dispatch.cache_stats()["misses"]
+        assert m_resident > m_streamed, \
+            "resident region must compile its own program"
+        lf(x, w)                                  # warm: no new programs
+        assert dispatch.cache_stats()["misses"] == m_resident
+        clear_resident()
+
+    def test_tracer_leaves_fall_back_to_streamed(self):
+        clear_resident()
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+        lf = lower(_quant_linear, resident_argnums=(1,))
+        ref = np.asarray(_quant_linear(x, w))
+        out = jax.jit(lambda xx, ww: lf(xx, ww))(x, w)
+        np.testing.assert_array_equal(np.asarray(out), ref)
+        from repro.cim.array import resident_stats
+        assert resident_stats()["resident_pins"] == 0
+        clear_resident()

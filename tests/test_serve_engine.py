@@ -1,0 +1,176 @@
+"""Serve-engine tests: paged KV block table + continuous batching.
+
+`PagedKV` is pure bookkeeping (block pool + ResidentSet reservations) and
+is tested exhaustively; the `ServeEngine` tests run a real reduced model
+through the queue and assert the request lifecycle invariants — completion,
+monotone timestamps, per-request attribution, slot/block recycling — not
+wall-clock numbers, which are machine-dependent and belong to the gated
+serve bench.
+"""
+import jax
+import pytest
+
+from repro.cim import CimOpError
+from repro.cim.array import ArraySpec, ResidentSet
+from repro.configs import get_config
+from repro.launch.paged_kv import PagedKV
+from repro.launch.serve import ServeEngine, ServeRequest, _percentile
+from repro.models import build
+
+SPEC = ArraySpec(banks=2, subarrays=1, rows=64, bitline_words=32)
+
+
+# ---------------------------------------------------------------------------
+# paged KV block table
+# ---------------------------------------------------------------------------
+
+
+class TestPagedKV:
+    def test_alloc_extend_free(self):
+        kv = PagedKV(spec=SPEC, n_blocks=4, block_tokens=4)
+        assert kv.alloc(0, 6)                    # 6 tokens -> 2 blocks
+        assert kv.blocks_in_use == 2
+        assert kv.extend(0, 2)                   # fills block 2, no claim
+        assert kv.blocks_in_use == 2
+        assert kv.extend(0, 1)                   # 9th token -> 3rd block
+        assert kv.blocks_in_use == 3
+        kv.free(0)
+        assert kv.blocks_in_use == 0
+        assert kv.stats().peak_blocks == 3
+
+    def test_alloc_is_all_or_nothing(self):
+        kv = PagedKV(spec=SPEC, n_blocks=2, block_tokens=4)
+        assert not kv.alloc(0, 12)               # needs 3 of 2 blocks
+        assert kv.blocks_in_use == 0             # partial claim rolled back
+        assert kv.stats().failed_allocs == 1
+        assert kv.alloc(0, 8)                    # pool still usable
+
+    def test_double_alloc_rejected(self):
+        kv = PagedKV(spec=SPEC, n_blocks=4, block_tokens=4)
+        kv.alloc(0, 4)
+        with pytest.raises(ValueError):
+            kv.alloc(0, 4)
+        with pytest.raises(ValueError):
+            kv.extend(99)
+
+    def test_bank_alignment(self):
+        kv = PagedKV(spec=SPEC, n_blocks=8, block_tokens=4)
+        assert [kv.bank_of_block(b) for b in range(4)] == [0, 1, 0, 1]
+
+    def test_reservations_drive_resident_rows(self):
+        rs = ResidentSet(SPEC)
+        kv = PagedKV(spec=SPEC, n_blocks=4, block_tokens=4, kv_bits=16,
+                     resident_set=rs)
+        assert kv.alloc(0, 8)                    # blocks 0,1 -> banks 0,1
+        assert rs.rows_per_bank() == {0: 16, 1: 16}
+        kv.free(0)
+        assert rs.resident_rows == 0             # reservations released
+
+    def test_failed_reservation_rolls_back_block(self):
+        # 3 rows of reserve budget: the 16-row KV reservation cannot fit
+        rs = ResidentSet(SPEC, reserve_rows=61)
+        kv = PagedKV(spec=SPEC, n_blocks=4, block_tokens=4, kv_bits=16,
+                     resident_set=rs)
+        assert not kv.alloc(0, 4)
+        assert kv.blocks_in_use == 0 and len(rs) == 0
+        assert kv.stats().failed_allocs == 1
+
+    def test_reservations_are_not_evictable_by_pins(self):
+        from repro.cim import PlanePack
+        import jax.numpy as jnp
+        rs = ResidentSet(SPEC)
+        kv = PagedKV(spec=SPEC, n_blocks=8, block_tokens=4, kv_bits=16,
+                     resident_set=rs)
+        assert kv.alloc(0, 32)                   # 8 blocks: 64 rows/bank
+        with pytest.raises(CimOpError, match="reservation"):
+            rs.pin("w", PlanePack.pack(jnp.arange(8), 8, signed=False))
+        assert kv.blocks_in_use == 8             # KV untouched
+
+    def test_for_model_sizing(self):
+        cfg = get_config("llama3.2-1b").reduced()
+        kv = PagedKV.for_model(cfg, spec=SPEC, slots=3, max_len=16)
+        words_per_token = 2 * cfg.kv_dim * cfg.n_layers
+        expect_bt = max(1, SPEC.tile_words // words_per_token)
+        assert kv.block_tokens == expect_bt
+        assert kv.n_blocks == 3 * (-(-16 // expect_bt))
+        # the pool holds exactly slots * max_len tokens
+        assert kv.n_blocks * kv.block_tokens >= 3 * 16
+
+
+def test_percentile():
+    assert _percentile([], 50) == 0.0
+    assert _percentile([7.0], 99) == 7.0
+    xs = [float(i) for i in range(101)]      # 0..100: index == percentile
+    assert _percentile(xs, 50) == 50.0
+    assert _percentile(xs, 99) == 99.0
+    assert _percentile(xs, 0) == 0.0
+    assert _percentile(list(reversed(xs)), 100) == 100.0
+
+
+# ---------------------------------------------------------------------------
+# the engine, end to end on a real reduced model
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _run(model, params, *, slots, reqs, prompt_len=4, gen=3, paged=None,
+         warmup_steps=0):
+    engine = ServeEngine(model, params, slots=slots,
+                         max_len=prompt_len + gen, paged=paged,
+                         warmup_steps=warmup_steps)
+    requests = [ServeRequest(rid=i, prompt_len=prompt_len, gen=gen)
+                for i in range(reqs)]
+    return engine.run(requests), requests
+
+
+def test_engine_completes_all_requests(small_model):
+    model, params = small_model
+    rep, requests = _run(model, params, slots=2, reqs=3, gen=3)
+    assert rep["requests"] == 3 and rep["total_tokens"] == 9
+    assert rep["decode_tokens"] == 6          # first token of each: prefill
+    for r in requests:
+        assert r.done and len(r.tokens) == r.gen
+        assert r.first_token_s >= r.arrival_s
+        assert r.done_s >= r.first_token_s
+        assert r.prefill_ms > 0.0
+        assert len(r.token_latencies_ms) == r.gen - 1
+    # 3 requests through 2 slots: the third waited for a retirement
+    assert {r.slot for r in requests} == {0, 1}
+
+
+def test_engine_recycles_slots_and_blocks(small_model):
+    model, params = small_model
+    cfg = model.cfg
+    paged = PagedKV.for_model(cfg, slots=2, max_len=7)
+    rep, _ = _run(model, params, slots=2, reqs=4, paged=paged)
+    assert rep["kv"]["failed_allocs"] == 0
+    assert paged.blocks_in_use == 0           # every retirement freed blocks
+    assert rep["kv"]["peak_blocks"] <= paged.n_blocks
+    assert rep["requests"] == 4
+
+
+def test_engine_report_shape(small_model):
+    model, params = small_model
+    rep, _ = _run(model, params, slots=2, reqs=2)
+    for key in ("tok_s_steady", "p50_ms", "p99_ms", "prefill_ms_mean",
+                "decode_steps", "wall_s", "per_request"):
+        assert key in rep
+    assert len(rep["per_request"]) == 2
+    for pr in rep["per_request"]:
+        assert pr["tokens"] == 3
+    assert rep["p99_ms"] >= rep["p50_ms"] >= 0.0
+
+
+def test_engine_single_token_requests(small_model):
+    # gen == 1: the prefill token completes the request, no decode steps
+    model, params = small_model
+    rep, requests = _run(model, params, slots=2, reqs=2, gen=1)
+    assert all(r.done and len(r.tokens) == 1 for r in requests)
+    assert rep["decode_tokens"] == 0 and rep["decode_steps"] == 0
