@@ -26,15 +26,24 @@ Other wall-times and machine-dependent metrics are deliberately NOT gated;
 the tightly gated quantities are analytic (byte models, schedule lengths,
 tile counts) and therefore deterministic across hosts.
 
+When `$GITHUB_STEP_SUMMARY` is set (GitHub Actions), the gate also appends
+a markdown table of every gated metric — section, metric, baseline,
+current, delta — so a red job names the exact metric in the job summary.
+`--keys` restricts gating to the named top-level baseline sections (CI
+runs the bench per section and gates each against its slice of the one
+committed baseline).
+
 Usage:
     python benchmarks/check_regression.py [BENCH_kernel.json]
         [--baseline benchmarks/baselines/BENCH_kernel.baseline.json]
-        [--tolerance 0.10] [--latency-factor 10.0]
+        [--keys attention,lowering] [--tolerance 0.10]
+        [--latency-factor 10.0]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 #: key names gated as never-grow counters (exact, deterministic)
@@ -88,12 +97,59 @@ def _gated(key: str, value) -> bool:
     return _is_ratio_key(key) or key in COUNTER_KEYS or key in LATENCY_KEYS
 
 
+def _gated_rows(baseline, current, path=""):
+    """(path, baseline, current) for every gated scalar in the baseline."""
+    if isinstance(baseline, dict):
+        rows = []
+        for key, bval in baseline.items():
+            sub = f"{path}.{key}" if path else key
+            cval = current.get(key) if isinstance(current, dict) else None
+            rows.extend(_gated_rows(bval, cval, sub))
+        return rows
+    key = path.rsplit(".", 1)[-1]
+    if not isinstance(baseline, (int, float)) or isinstance(baseline, bool):
+        return []
+    if _is_ratio_key(key) or key in COUNTER_KEYS or key in LATENCY_KEYS:
+        return [(path, baseline, current)]
+    return []
+
+
+def _write_step_summary(baseline, current, problems, baseline_path) -> None:
+    """Append the (section, metric, baseline, current, delta) table to the
+    GitHub Actions job summary. No-op outside Actions."""
+    out = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not out:
+        return
+    bad = {p for p, _, _, _ in problems}
+    lines = [f"### Perf gate vs `{baseline_path}`", "",
+             "| section | metric | baseline | current | delta |",
+             "|---|---|---:|---:|---:|"]
+    for path, bval, cval in _gated_rows(baseline, current):
+        section, _, metric = path.partition(".")
+        mark = " ❌" if path in bad else ""
+        if isinstance(cval, (int, float)) and not isinstance(cval, bool):
+            cur, delta = f"{cval:g}", f"{cval - bval:+g}"
+        else:
+            cur, delta = "missing", ""
+        lines.append(f"| {section} | {metric or section}{mark} | "
+                     f"{bval:g} | {cur} | {delta} |")
+    lines.append("")
+    status = (f"**{len(problems)} gated metric(s) FAILED**" if problems
+              else "all gated metrics within tolerance")
+    lines.append(status)
+    with open(out, "a") as f:
+        f.write("\n".join(lines) + "\n\n")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", nargs="?", default="BENCH_kernel.json",
                     help="benchmark JSON produced by kernel_bench.py --json")
     ap.add_argument("--baseline",
                     default="benchmarks/baselines/BENCH_kernel.baseline.json")
+    ap.add_argument("--keys", default="",
+                    help="comma-separated top-level baseline keys to gate "
+                         "(default: every key); unknown keys fail loudly")
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed fractional ratio drop (default 0.10)")
     ap.add_argument("--latency-factor", type=float, default=10.0,
@@ -106,9 +162,20 @@ def main(argv=None) -> int:
     with open(args.current) as f:
         current = json.load(f)
 
+    if args.keys:
+        sel = [s.strip() for s in args.keys.split(",") if s.strip()]
+        unknown = [s for s in sel if s not in baseline]
+        if unknown:
+            print(f"PERF GATE ERROR: --keys {unknown} not in "
+                  f"{args.baseline} (a renamed/dropped section must not "
+                  f"silently pass)")
+            return 1
+        baseline = {k: v for k, v in baseline.items() if k in sel}
+
     problems = list(compare(baseline, current, args.tolerance,
                             latency_factor=args.latency_factor))
     checked = sum(_count_gated(k, v) for k, v in baseline.items())
+    _write_step_summary(baseline, current, problems, args.baseline)
     if problems:
         print(f"PERF REGRESSION: {len(problems)} of {checked} gated metrics "
               f"failed vs {args.baseline}")

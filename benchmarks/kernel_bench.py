@@ -22,13 +22,20 @@ Sections:
     counts of the lowered hybrid program (asserted equal to the executed
     ledger AND to the jaxpr-sourced offload estimate) and the lowered-MLP
     traffic ratio vs the near-memory per-access baseline.
+  attention — batched dot_general lowering end to end: the quantized SDPA
+    core (QK^T + AV as planned batched schedules, softmax a host island)
+    bit-exact vs its host twin with accesses == plan == offload report and
+    exactly 2 warm dispatches; resident-KV reuse > 0; blockwise attention
+    replaying ONE compiled program pair across kv blocks; and a full
+    decode step's dispatch count asserted exact — O(layers), not O(eqns).
 
 `--json [PATH]` additionally writes the metrics as BENCH_kernel.json for CI
 artifact tracking of the perf trajectory per PR; `benchmarks/
 check_regression.py` gates CI on the committed baseline of that file.
-`--twice` runs every section a second time and asserts the warm pass is
-all schedule-cache hits with an unchanged per-pass dispatch count (zero
-retrace end to end).
+`--sections` runs a named subset (CI runs one step per section so a gate
+failure names the section); `--twice` runs every selected section a second
+time and asserts the warm pass is all schedule-cache hits with an
+unchanged per-pass dispatch count (zero retrace end to end).
 """
 import argparse
 import json
@@ -373,6 +380,173 @@ def lowering_section(metrics):
     }
 
 
+def attention_section(metrics):
+    """Batched dot_general lowering end to end (see module docstring).
+
+    Every assertion here is the acceptance contract of the attention
+    lowering: bit-exact parity with the plain-JAX quantized twin, the
+    executed ledger equal to both the compiled plan and the jaxpr-sourced
+    offload estimate (which must classify the contractions as
+    `batched_dot` with both KV sides resident-savable), warm dispatch
+    counts exact, and resident KV reuse observed."""
+    from repro.configs.base import ArchConfig
+    from repro.core.offload import analyze_trace
+    from repro.models import attention as attn_mod
+    from repro.models import build, layers
+    from repro.models.blockwise_attention import (
+        blockwise_attention_cim, blockwise_attention_quantized)
+    from repro.train import make_decode_step
+
+    led = cim.ledger()
+    rng = np.random.RandomState(7)
+    b, tq, hq, hkv, d, tk, n_bits = 2, 1, 4, 2, 8, 16, 8
+    q = jnp.array(rng.randn(b, tq, hq, d), jnp.float32)
+    k = jnp.array(rng.randn(b, tk, hkv, d), jnp.float32)
+    v = jnp.array(rng.randn(b, tk, hkv, d), jnp.float32)
+    mask = jnp.ones((b, 1, tk), bool)
+    scale = 1.0 / d ** 0.5
+    shape = f"{b}x{hq}x{tk}x{d}"
+
+    # -- lowered SDPA: parity + plan == ledger == offload ------------------
+    host = attn_mod._sdpa_quantized(q, k, v, mask, scale, n_bits)
+    qs = q.astype(jnp.float32) * scale
+    lf = attn_mod._lowered_sdpa(n_bits, "jnp-boolean", None, None, False)
+    comp = lf.trace(qs, k, v, mask)
+    led.reset()
+    out = lf(qs, k, v, mask).astype(q.dtype)
+    np.testing.assert_array_equal(np.array(out), np.array(host))
+    sdpa_ledger = led.accesses               # one call's charge
+    assert sdpa_ledger == comp.accesses, (sdpa_ledger, comp.accesses)
+    rep = analyze_trace(comp.trace)
+    assert rep.adra_accesses == sdpa_ledger, (rep.adra_accesses, sdpa_ledger)
+    assert rep.op_histogram.get("batched_dot") == 2, rep.op_histogram
+    assert rep.resident_savable_accesses == 2, rep   # the K^T and V sides
+    sdpa_disp = _one_call_dispatches(lambda: lf(qs, k, v, mask))
+    assert sdpa_disp == len(comp.regions) == 2, (sdpa_disp, comp.regions)
+    print(f"attention_sdpa_accesses,{shape},{sdpa_ledger},"
+          f"plan == ledger == offload (QK^T + AV)")
+    print(f"attention_sdpa_dispatches,{shape},{sdpa_disp},"
+          f"two fused regions, softmax a host island")
+
+    # -- resident KV: pinned K^T/V planes, reuse on the second call --------
+    st0 = dispatch.cache_stats()
+    r1 = attn_mod.sdpa_cim(q, k, v, mask, scale, n_bits=n_bits,
+                           backend="jnp-boolean", resident=True)
+    r2 = attn_mod.sdpa_cim(q, k, v, mask, scale, n_bits=n_bits,
+                           backend="jnp-boolean", resident=True)
+    st1 = dispatch.cache_stats()
+    np.testing.assert_array_equal(np.array(r1), np.array(host))
+    np.testing.assert_array_equal(np.array(r2), np.array(host))
+    kv_reuses = st1.get("resident_hits", 0) - st0.get("resident_hits", 0)
+    assert kv_reuses > 0, (st0, st1)
+    print(f"attention_resident_kv_reuses,{shape},{kv_reuses},"
+          f"same k/v arrays: entry packs skipped, >0 required")
+
+    # -- blockwise: one compiled program pair replayed across kv blocks ----
+    tq2, tk2, bk = 4, 32, 8
+    q2 = jnp.array(rng.randn(b, tq2, hq, d), jnp.float32)
+    k2 = jnp.array(rng.randn(b, tk2, hkv, d), jnp.float32)
+    v2 = jnp.array(rng.randn(b, tk2, hkv, d), jnp.float32)
+    nk = tk2 // bk
+    href = blockwise_attention_quantized(q2, k2, v2, True, None, 0, bk,
+                                         n_bits)
+    s0 = dispatch.cache_stats()
+    c1 = blockwise_attention_cim(q2, k2, v2, True, None, 0, bk, n_bits,
+                                 backend="jnp-boolean")
+    s1 = dispatch.cache_stats()
+    np.testing.assert_array_equal(np.array(c1), np.array(href))
+    bw_programs = s1["misses"] - s0["misses"]
+    assert bw_programs <= 2, bw_programs     # QK-shape + AV-shape, shared
+    c2 = blockwise_attention_cim(q2, k2, v2, True, None, 0, bk, n_bits,
+                                 backend="jnp-boolean")
+    s2 = dispatch.cache_stats()
+    np.testing.assert_array_equal(np.array(c2), np.array(href))
+    bw_disp = s2["dispatches"] - s1["dispatches"]
+    assert s2["misses"] == s1["misses"], (s1, s2)
+    assert bw_disp == 2 * nk, (bw_disp, nk)
+    bshape = f"{b}x{hq}x{tk2}x{d}bk{bk}"
+    print(f"attention_blockwise_dispatches,{bshape},{bw_disp},"
+          f"2 per kv block, {bw_programs} fresh programs this pass")
+
+    # -- a full decode step: dispatch count O(layers), asserted exact ------
+    cfg = ArchConfig(name="bench-decode", family="dense", n_layers=2,
+                     d_model=16, n_heads=4, n_kv_heads=2, head_dim=8,
+                     d_ff=32, vocab_size=64, dtype="float32",
+                     tensor_parallel=False, cim_mlp_bits=n_bits,
+                     cim_attention_bits=n_bits, cim_unroll_groups=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    caches = model.init_caches(2, 8)
+    dec = make_decode_step(model)
+    step = {"tokens": jnp.array([[1], [2]], jnp.int32),
+            "positions": jnp.array([3, 5], jnp.int32)}
+    pm = layers.mlp_init(jax.random.PRNGKey(3), cfg.d_model, cfg.d_ff,
+                         cfg.gating, jnp.float32)
+    xm = jnp.zeros((2, 1, cfg.d_model), jnp.float32)
+    mlp_regions = len(layers._lowered_mlp(cfg.gating, n_bits, None, None,
+                                          None).trace(pm, xm).regions)
+    dec_disp = _one_call_dispatches(lambda: dec(params, caches, step))
+    expected = cfg.n_layers * (2 + mlp_regions)
+    assert dec_disp == expected, (dec_disp, expected)
+    led.reset()
+    dec(params, caches, step)
+    dec_accesses = led.accesses
+    print(f"attention_decode_step_dispatches,{cfg.n_layers}layers,"
+          f"{dec_disp},exact: layers x (2 attn + {mlp_regions} mlp) regions")
+    print(f"attention_decode_step_accesses,{cfg.n_layers}layers,"
+          f"{dec_accesses},every integer contraction a planned schedule")
+
+    metrics["attention"] = {
+        "sdpa": {
+            "shape": [b, tq, hq, hkv, d, tk],
+            "accesses": comp.accesses,
+            "ledger_accesses": sdpa_ledger,
+            "offload_accesses": rep.adra_accesses,
+            "batched_dot_ops": rep.op_histogram.get("batched_dot", 0),
+            "resident_savable_accesses": rep.resident_savable_accesses,
+            "regions": len(comp.regions),
+            "dispatches": sdpa_disp,
+        },
+        "resident_kv": {"reuses": kv_reuses},
+        "blockwise": {
+            "shape": [b, tq2, hq, hkv, d, tk2],
+            "block_k": bk,
+            "n_blocks": nk,
+            "dispatches": bw_disp,
+        },
+        "decode_step": {
+            "n_layers": cfg.n_layers,
+            "mlp_regions_per_layer": mlp_regions,
+            "dispatches": dec_disp,
+            "accesses": dec_accesses,
+        },
+    }
+
+
+#: canonical section order; the `kernel` alias groups the substrate
+#: sections so CI can run one step per gate-relevant unit
+SECTIONS = (("engine", engine_section), ("macro", macro_section),
+            ("bank_sweep", bank_sweep_section),
+            ("lowering", lowering_section),
+            ("attention", attention_section))
+SECTION_ALIASES = {"all": ("engine", "macro", "bank_sweep", "lowering",
+                           "attention"),
+                   "kernel": ("engine", "macro", "bank_sweep")}
+
+
+def _resolve_sections(arg: str):
+    picked = []
+    for name in (s.strip() for s in arg.split(",") if s.strip()):
+        for resolved in SECTION_ALIASES.get(name, (name,)):
+            if resolved not in dict(SECTIONS):
+                raise SystemExit(f"unknown bench section {name!r}; pick "
+                                 f"from {[n for n, _ in SECTIONS]} or "
+                                 f"aliases {sorted(SECTION_ALIASES)}")
+            if resolved not in picked:
+                picked.append(resolved)
+    return [(n, fn) for n, fn in SECTIONS if n in picked]
+
+
 def main(argv=()):
     # argv defaults to () so programmatic callers (benchmarks.run) never
     # inherit the host process's CLI; __main__ passes sys.argv explicitly
@@ -380,17 +554,21 @@ def main(argv=()):
     ap.add_argument("--json", nargs="?", const="BENCH_kernel.json",
                     default=None, metavar="PATH",
                     help="also write metrics to PATH (default BENCH_kernel.json)")
+    ap.add_argument("--sections", default="all",
+                    help="comma-separated sections to run: "
+                         "engine,macro,bank_sweep,lowering,attention, or "
+                         "the aliases all / kernel (=engine+macro+"
+                         "bank_sweep)")
     ap.add_argument("--twice", action="store_true",
                     help="run every section a second time and assert the "
                          "warm pass is all schedule-cache hits with an "
                          "unchanged per-pass dispatch count")
     args = ap.parse_args(list(argv))
+    selected = _resolve_sections(args.sections)
 
     def run_sections(metrics):
-        engine_section(metrics)
-        macro_section(metrics)
-        bank_sweep_section(metrics)
-        lowering_section(metrics)
+        for _, fn in selected:
+            fn(metrics)
 
     s0 = dispatch.cache_stats()
     metrics = {}

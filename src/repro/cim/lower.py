@@ -138,10 +138,15 @@ class ResidentAtom:
               this atom as its rhs, so the pinned stack is the expanded
               [M, K_pad, N] entry pack (macro.matmul_rhs_pack) and warm
               calls skip the rhs expansion AND pack entirely;
+              "batched_matmul_rhs" — the batched analogue: the consumers
+              are canonical batched dots and the pinned stack is the
+              [B_flat * M, K_pad, N] expansion
+              (macro.batched_matmul_rhs_pack) — attention's K^T / V sides;
               "pack" — the atom's plain entry pack is pinned and seeded
               into the region's pack env.
     n_words : logical words of the pinned pack (fit checks + charges).
-    m       : matmul_rhs only — the lhs row count baked into the pack.
+    m       : *matmul_rhs only — the per-batch lhs row count baked into
+              the pack.
     """
 
     ai: int
@@ -287,8 +292,9 @@ def _classify_resident(region: Region, ai: int, atom) -> \
                and op.invars[0] is not frontier for _, op in cons):
             for _, op in cons:
                 lhs_aval = aval_of(op.invars[0])
-                sig = (int(lhs_aval.shape[0]), op.n_bits,
-                       dtype_signed(lhs_aval.dtype))
+                nb = len(op.params["dimension_numbers"][1][0])
+                sig = (nb, tuple(int(d) for d in lhs_aval.shape[:-1]),
+                       op.n_bits, dtype_signed(lhs_aval.dtype))
                 if mk is None:
                     mk = sig
                 elif mk != sig:
@@ -306,12 +312,22 @@ def _classify_resident(region: Region, ai: int, atom) -> \
         chain_eqns.append(ei)
         frontier = op.outvars[0]
     f_aval = aval_of(frontier)
-    if rhs_only and mk is not None and len(f_aval.shape) == 2:
-        m, n_bits, signed = mk
-        k, n = int(f_aval.shape[0]), int(f_aval.shape[1])
+    if rhs_only and mk is not None and len(f_aval.shape) == mk[0] + 2:
+        nb, lead, n_bits, signed = mk
+        # `lead` is the lhs's [*B, M]; the pinned stack holds one expanded
+        # [K_pad, N] block per (batch, m) row, so the flattened row count is
+        # prod(lead) and the per-batch M (what the pack builder broadcasts
+        # the rhs over) is its last entry
+        rows = 1
+        for d in lead:
+            rows *= d
+        m = lead[-1]
+        k, n = int(f_aval.shape[-2]), int(f_aval.shape[-1])
         k_pad = 1 << planner._log2_ceil(k)
-        return ResidentAtom(ai=ai, kind="matmul_rhs", n_bits=n_bits,
-                            signed=signed, n_words=m * k_pad * n, m=m,
+        return ResidentAtom(ai=ai,
+                            kind="batched_matmul_rhs" if nb else "matmul_rhs",
+                            n_bits=n_bits, signed=signed,
+                            n_words=rows * k_pad * n, m=m,
                             chain_eqns=tuple(chain_eqns))
     n_words = 1
     for d in aval.shape:
@@ -510,7 +526,7 @@ class LoweredComputation:
         """The concrete plane stack a ResidentSet pins for one atom —
         bitwise identical to what the region body would build per call."""
         arr = jnp.asarray(value)
-        if ra.kind == "matmul_rhs":
+        if ra.kind in ("matmul_rhs", "batched_matmul_rhs"):
             # replay the skipped pass-through chain on the host: these are
             # the eqns between the region input and the dot's rhs
             for ei in ra.chain_eqns:
@@ -520,6 +536,9 @@ class LoweredComputation:
                     arr = arr.astype(oav.dtype)
                 else:
                     arr = arr.reshape(tuple(oav.shape))
+            if ra.kind == "batched_matmul_rhs":
+                return macro.batched_matmul_rhs_pack(arr, ra.m, ra.n_bits,
+                                                     signed=ra.signed)
             return macro.matmul_rhs_pack(arr, ra.m, ra.n_bits,
                                          signed=ra.signed)
         if arr.dtype == jnp.bool_:
@@ -661,7 +680,7 @@ class LoweredComputation:
             for j, (atom, leaf) in enumerate(zip(region.in_atoms, leaves)):
                 ra = resident_kinds.get(j)
                 if ra is not None:
-                    if ra.kind == "matmul_rhs":
+                    if ra.kind in ("matmul_rhs", "batched_matmul_rhs"):
                         # keyed at the END of the pass-through chain — the
                         # var the dot handler actually consumes; the reuse
                         # charge lands inside _matmul_with
@@ -755,12 +774,14 @@ class LoweredComputation:
                 elif name == "dot_general":
                     rb = resident_matmul.get(op.invars[1]) \
                         if isinstance(op.invars[1], jax.core.Var) else None
-                    res = chain.matmul(geti(op.invars[0]),
-                                       None if rb is not None
-                                       else geti(op.invars[1]), op.n_bits,
-                                       signed=dtype_signed(
-                                           aval_of(op.invars[0]).dtype),
-                                       b_pack=rb)
+                    nb = len(op.params["dimension_numbers"][1][0])
+                    mm = chain.batched_matmul if nb else chain.matmul
+                    res = mm(geti(op.invars[0]),
+                             None if rb is not None
+                             else geti(op.invars[1]), op.n_bits,
+                             signed=dtype_signed(
+                                 aval_of(op.invars[0]).dtype),
+                             b_pack=rb)
                 elif name == "convert_element_type":
                     src_shape = tuple(aval_of(op.invars[0]).shape)
                     res = getp(op.invars[0], src_shape)

@@ -509,6 +509,91 @@ def matmul_rhs_pack(b: jax.Array, m: int, n_bits: int,
     return PlanePack.pack(b_exp, n_bits, signed=signed)
 
 
+def batched_matmul_rhs_pack(b: jax.Array, m: int, n_bits: int,
+                            signed: bool = True) -> PlanePack:
+    """The expanded [B_flat * M, K_pad, N] rhs entry pack of a batched
+    matmul ([*B, K, N] rhs broadcast over the lhs's M rows within each
+    batch element) — the plane stack a ResidentSet pins for an attention
+    K^T / V side so warm decode streams only the query past resident rows.
+    Built OUTSIDE any trace, like `matmul_rhs_pack`."""
+    b = jnp.asarray(b)
+    if b.ndim < 3:
+        raise CimOpError(f"batched matmul rhs must be [*B, K, N], "
+                         f"got {b.shape}")
+    k, n = int(b.shape[-2]), int(b.shape[-1])
+    bf = 1
+    for d in b.shape[:-2]:
+        bf *= int(d)
+    k_pad = 1 << planner._log2_ceil(k)
+    b3 = b.reshape(bf, k, n)
+    b_exp = jnp.zeros((bf * m, k_pad, n), jnp.int32).at[:, :k, :].set(
+        jnp.broadcast_to(b3[:, None, :, :], (bf, m, k, n))
+        .astype(jnp.int32).reshape(bf * m, k, n))
+    return PlanePack.pack(b_exp, n_bits, signed=signed)
+
+
+def _batched_matmul_with(cur: ScheduleCursor, a: jax.Array, b,
+                         n_bits: int, signed: bool = True,
+                         b_pack: Optional[PlanePack] = None) -> PlanePack:
+    """The batched matmul dataflow over an open cursor: the batch dims
+    flatten onto the word axis, the expanded operands are
+    [B_flat * M, K_pad, N], and the step sequence — one shift-and-add
+    multiply plus a log2(K_pad) stride-N tree reduction — is the 2-D
+    `_matmul_with` dataflow verbatim with M' = B_flat * M. Correctness of
+    the shared reduction follows from the 2-D argument: each (b, m) block
+    is a contiguous K_pad * N word segment whose k = 0 slice alone is
+    gathered at exit; cross-block garbage lands on discarded k > 0 slots.
+
+    With `b_pack` (a pinned `batched_matmul_rhs_pack`) the rhs side is
+    RESIDENT: its per-batch expansion and entry pack are skipped and the
+    ledger charges one zero-load reuse — decode's KV sides stay in rows
+    while only the streamed lhs (the query) pays loads."""
+    a = jnp.asarray(a)
+    if a.ndim < 3:
+        raise CimOpError(f"batched matmul needs [*B, M, K] lhs, "
+                         f"got {a.shape}")
+    m, k = int(a.shape[-2]), int(a.shape[-1])
+    bdims = tuple(int(d) for d in a.shape[:-2])
+    bf = 1
+    for d in bdims:
+        bf *= d
+    a2 = a.reshape(bf * m, k)
+    if b_pack is not None:
+        mm, k_pad, n = b_pack.shape
+        if mm != bf * m or k > k_pad:
+            raise CimOpError(
+                f"resident rhs pack {b_pack.shape} does not match lhs "
+                f"{a.shape} (expanded for {bf}x{m} rows, K_pad={k_pad})")
+        pb = b_pack
+    else:
+        b = jnp.asarray(b)
+        if b.ndim != a.ndim or tuple(int(d) for d in b.shape[:-2]) != bdims \
+                or int(b.shape[-2]) != k:
+            raise CimOpError(
+                f"batched matmul needs [*B,M,K] x [*B,K,N], "
+                f"got {a.shape} {b.shape}")
+        n = int(b.shape[-1])
+        k_pad = 1 << planner._log2_ceil(k)
+        b3 = b.reshape(bf, k, n)
+        b_exp = jnp.zeros((bf * m, k_pad, n), jnp.int32).at[:, :k, :].set(
+            jnp.broadcast_to(b3[:, None, :, :], (bf, m, k, n))
+            .astype(jnp.int32).reshape(bf * m, k, n))
+        pb = PlanePack.pack(b_exp, n_bits, signed=signed)
+        cur.charge_load(n_bits, pb.n_words)
+    a_exp = jnp.zeros((bf * m, k_pad, n), jnp.int32).at[:, :k, :].set(
+        jnp.broadcast_to(a2[:, :, None], (bf * m, k, n)).astype(jnp.int32))
+    pa = PlanePack.pack(a_exp, n_bits, signed=signed)
+    cur.charge_load(n_bits, pa.n_words)
+    if b_pack is not None:
+        cur.charge_resident(n_bits, pb.n_words)
+
+    prod = _multiply_with(cur, pa, pb)
+    acc = _reduce_with(cur, prod, n_steps=planner._log2_ceil(k_pad))
+
+    idx = (np.arange(bf * m)[:, None] * (k_pad * n) + np.arange(n)[None, :])
+    return acc.take_words(idx.reshape(-1), bdims + (m, n))
+
+
 def _matmul_with(cur: ScheduleCursor, a: jax.Array, b,
                  n_bits: int, signed: bool = True,
                  b_pack: Optional[PlanePack] = None) -> PlanePack:
@@ -610,6 +695,64 @@ def matmul(a: jax.Array, b: Optional[jax.Array] = None, n_bits: int = 8,
                                 backend=backend, spec=spec, mesh=mesh)
 
 
+def batched_matmul(a: jax.Array, b: Optional[jax.Array] = None,
+                   n_bits: int = 8, backend: Optional[str] = None,
+                   spec: Optional[ArraySpec] = None, mesh=None,
+                   b_pack: Optional[PlanePack] = None) -> jax.Array:
+    """Exact batched intN x intN -> int32 contraction through the CiM array.
+
+    a : int [*B, M, K], b : int [*B, K, N] — every batch element contracts
+    in the SAME (2*n_bits - 1) + ceil(log2 K) accesses as a single 2-D
+    matmul: the batch dims flatten onto the word/tile axis, so batching
+    scales words (and tile placement) but never the per-tile access count.
+
+    With `b_pack` (a pinned `batched_matmul_rhs_pack`; `b` may then be
+    None) the rhs is RESIDENT and only the lhs pays operand loads — the
+    decode-attention execution where K^T and V live in rows and the query
+    streams past them.
+    """
+    a = jnp.asarray(a)
+    if a.ndim < 3:
+        raise CimOpError(f"batched matmul needs [*B, M, K] lhs, "
+                         f"got {a.shape}")
+    m, k = int(a.shape[-2]), int(a.shape[-1])
+    bf = 1
+    for d in a.shape[:-2]:
+        bf *= int(d)
+    if b_pack is not None:
+        mm, k_pad, n = b_pack.shape
+        sched = _place(planner.plan_batched_matmul(
+            bf, k_pad, n, n_bits=n_bits, signed=True, resident_rhs=True),
+            spec, mm * k_pad * n)
+
+        def body_res(cur, a_, bp):
+            return _batched_matmul_with(cur, a_, None, n_bits,
+                                        b_pack=bp).unpack()
+
+        return run_schedule_program(
+            sched, body_res, (a, b_pack),
+            body_key=("batched_matmul", n_bits, "resident"),
+            backend=backend, spec=spec, mesh=mesh)
+    b = jnp.asarray(b)
+    if b.ndim != a.ndim or b.shape[:-2] != a.shape[:-2] \
+            or int(b.shape[-2]) != k:
+        raise CimOpError(
+            f"batched matmul needs [*B,M,K] x [*B,K,N], got {a.shape} "
+            f"{b.shape}")
+    n = int(b.shape[-1])
+    k_pad = 1 << planner._log2_ceil(k)
+    sched = _place(planner.plan_batched_matmul(bf, k, n, n_bits=n_bits,
+                                               signed=True),
+                   spec, bf * m * k_pad * n)
+
+    def body(cur, a_, b_):
+        return _batched_matmul_with(cur, a_, b_, n_bits).unpack()
+
+    return run_schedule_program(sched, body, (a, b),
+                                body_key=("batched_matmul", n_bits),
+                                backend=backend, spec=spec, mesh=mesh)
+
+
 # ---------------------------------------------------------------------------
 # chain executor: one cursor for a fused multi-eqn region
 # ---------------------------------------------------------------------------
@@ -679,6 +822,12 @@ class ChainExecutor:
                b_pack: Optional[PlanePack] = None) -> PlanePack:
         return _matmul_with(self.cursor, a, b, n_bits, signed=signed,
                             b_pack=b_pack)
+
+    def batched_matmul(self, a: jax.Array, b, n_bits: int,
+                       signed: bool = True,
+                       b_pack: Optional[PlanePack] = None) -> PlanePack:
+        return _batched_matmul_with(self.cursor, a, b, n_bits, signed=signed,
+                                    b_pack=b_pack)
 
     def finish(self) -> None:
         self.cursor.finish()

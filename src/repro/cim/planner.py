@@ -236,6 +236,40 @@ def plan_dot(k: int, n_bits: int = 8, signed: bool = True) -> Schedule:
     return dataclasses.replace(sched, macro="dot")
 
 
+def plan_batched_matmul(batch: int, k: int, n_cols: int, n_bits: int = 8,
+                        signed: bool = True,
+                        resident_rhs: bool = False) -> Schedule:
+    """Batched intN contraction [*B, M, K] x [*B, K, N] over the SAME
+    broadcast word layout as `plan_matmul`, with the batch dims flattened
+    onto the word/tile axis: the expanded operand stack is
+    [B_flat * M, K_pad, N] and the step sequence — one shift-and-add
+    multiply plus a log2(K_pad) stride-N tree reduction — is IDENTICAL to
+    the 2-D plan. Batch size scales the word count (and therefore the tile
+    placement) but NEVER the access count per tile: that independence is
+    the whole eligibility argument for putting attention's per-head
+    contractions in the banks.
+
+    The stride-N reduction is correct in the flattened layout for the same
+    reason it is correct across the 2-D plan's M axis: each (b, m) block
+    owns a contiguous K_pad * N word segment, partial sums that a high-k
+    shift drags across a block boundary land on k > 0 slots, and the exit
+    gather reads only the k = 0 slice of every block.
+
+    `resident_rhs` names the rhs (the attention K^T / V side) resident,
+    exactly as in `plan_matmul`: same steps, different operand loading,
+    different compiled-program identity."""
+    if batch < 1:
+        raise opset.CimOpError(f"batched matmul needs batch >= 1, got {batch}")
+    if k < 1 or n_cols < 1:
+        raise opset.CimOpError(f"matmul needs k, n >= 1, got {k}, {n_cols}")
+    k_pad = 1 << _log2_ceil(k)
+    mul = plan_multiply(n_bits, n_bits, signed_b=signed)
+    red = plan_reduce_sum(k_pad, stride=n_cols, n_bits=mul.out_bits)
+    sched = Schedule("batched_matmul", mul.steps + red.steps,
+                     out_bits=red.out_bits, operands=("lhs", "rhs"))
+    return sched.with_resident("rhs") if resident_rhs else sched
+
+
 # ---------------------------------------------------------------------------
 # cross-op schedule concatenation (region fusion)
 # ---------------------------------------------------------------------------
@@ -275,6 +309,7 @@ PLANS = {
     "reduce_sum": plan_reduce_sum,
     "matmul": plan_matmul,
     "dot": plan_dot,
+    "batched_matmul": plan_batched_matmul,
 }
 
 

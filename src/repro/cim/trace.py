@@ -7,9 +7,11 @@ nested `pjit` calls, and classifies every equation into the ADRA cost model:
            add / sub / compare (lt, le, gt, ge, eq, ne) / bitwise
            and-or-xor / min / max / neg / abs.
   multi  — ops the macro planner (repro.cim.planner) lowers to explicit
-           access schedules: mul (shift-and-add), 2-D integer dot_general
-           (broadcast-layout contraction), full reduce_sum (log-stride
-           tree), population_count (pairwise plane tree).
+           access schedules: mul (shift-and-add), integer dot_general in
+           the canonical [*B,M,K]x[*B,K,N] form — 2-D or batched, the
+           batch dims flattening onto the word/tile axis of the broadcast
+           contraction layout — full reduce_sum (log-stride tree),
+           population_count (pairwise plane tree).
   free   — zero-access peripheral wiring that keeps a fused region in the
            packed domain: int<->int convert_element_type (plane truncate /
            sign-extend), reshape, bitwise not (SA output complement),
@@ -275,22 +277,37 @@ def classify(op: TracedOp) -> None:
     if name == "dot_general":
         lhs, rhs = avals_in
         dims = op.params["dimension_numbers"]
-        if (len(lhs.shape), len(rhs.shape)) != (2, 2) or \
-                tuple(map(tuple, dims[0])) != ((1,), (0,)) or \
-                any(dims[1]):
-            _host(op, "only 2-D [M,K]x[K,N] contractions are lowered")
+        (lc, rc), (lb, rb) = dims
+        nb = len(lb)
+        # canonical (possibly batched) form: [*B, M, K] x [*B, K, N] with
+        # the batch dims leading on BOTH sides, the lhs contracting last and
+        # the rhs contracting second-to-last — exactly what jnp.matmul emits
+        # for stacked operands. Batch dims map onto the word/tile axis of
+        # the broadcast layout, so the plan's access count is independent of
+        # batch size per tile (see planner.plan_batched_matmul).
+        if (len(lhs.shape), len(rhs.shape)) != (nb + 2, nb + 2) or \
+                tuple(lb) != tuple(range(nb)) or \
+                tuple(rb) != tuple(range(nb)) or \
+                tuple(lc) != (nb + 1,) or tuple(rc) != (nb,):
+            _host(op, "only canonical [*B,M,K]x[*B,K,N] contractions "
+                      "are lowered")
             return
         if lhs.dtype != rhs.dtype:
             _host(op, "mixed-dtype contraction")
             return
-        m, k = lhs.shape
-        n_cols = rhs.shape[1]
+        batch = _numel(lhs.shape[:nb])
+        m, k = int(lhs.shape[nb]), int(lhs.shape[nb + 1])
+        n_cols = int(rhs.shape[nb + 1])
         n = dtype_bits(lhs.dtype)
-        k_pad = 1 << planner._log2_ceil(int(k))
-        op.schedule = planner.plan_matmul(
-            int(k), int(n_cols), n_bits=n, signed=dtype_signed(lhs.dtype))
+        k_pad = 1 << planner._log2_ceil(k)
+        if nb:
+            op.schedule = planner.plan_batched_matmul(
+                batch, k, n_cols, n_bits=n, signed=dtype_signed(lhs.dtype))
+        else:
+            op.schedule = planner.plan_matmul(
+                k, n_cols, n_bits=n, signed=dtype_signed(lhs.dtype))
         op.kind, op.n_bits = "multi", n
-        op.words = int(m) * k_pad * int(n_cols)
+        op.words = batch * m * k_pad * n_cols
         op.accesses = op.schedule.accesses
         return
     _host(op, f"unhandled primitive {name!r}")   # pragma: no cover

@@ -77,6 +77,10 @@ class ArchConfig:
     cim_mlp_bits: int = 0           # >0: dense MLPs run through the
     #                                 jaxpr->CiM lowering pass at this
     #                                 quantization width (serve --cim-lower)
+    cim_attention_bits: int = 0     # >0: GQA decode attention (QK^T + AV)
+    #                                 runs through the lowering pass as
+    #                                 batched CiM schedules; softmax/rotary
+    #                                 stay host islands (serve --cim-lower)
     cim_resident: bool = False      # pin int8 MLP weight planes in the
     #                                 array's resident region across calls
     #                                 (serve --cim-resident): warm decode

@@ -190,11 +190,18 @@ def analyze_trace(tr, scheme: str = "current", rows: int = 1024,
         n_ops += 1
         adra_accesses += op.accesses
         name = _HIST_NAMES.get(op.name, op.name)
+        if op.name == "dot_general" and \
+                len(op.params["dimension_numbers"][1][0]) > 0:
+            # attention's QK^T/AV land here: batch dims on tile rows, the
+            # contraction on the broadcast layout (plan_batched_matmul)
+            name = "batched_dot"
         hist[name] = hist.get(name, 0) + 1
         place(op.words, op.accesses)
         stream_loads += _LOADS.get(op.name, 2)
         if op.name == "dot_general":
-            # a pinnable rhs removes exactly its side of the dot's loads
+            # a pinnable rhs removes exactly its side of the dot's loads —
+            # for batched_dot that side is the K^T / V operand (the KV
+            # cache under `sdpa_cim(resident=True)`)
             resident_savable += 1
 
         if op.kind == "single":
@@ -214,7 +221,7 @@ def analyze_trace(tr, scheme: str = "current", rows: int = 1024,
         elif op.name == "dot_general":
             lhs = aval_of(op.invars[0])
             out = aval_of(op.outvars[0])
-            k = int(lhs.shape[1])
+            k = int(lhs.shape[-1])       # contracting dim (2-D and batched)
             out_nel = 1
             for d in out.shape:
                 out_nel *= int(d)

@@ -411,6 +411,7 @@ def main():
     cfg = preset_config(args.arch, args.preset)
     if args.cim_lower:
         cfg = dataclasses.replace(cfg, cim_mlp_bits=args.cim_bits,
+                                  cim_attention_bits=args.cim_bits,
                                   cim_unroll_groups=True)
     if args.cim_resident and not args.cim_lower:
         cfg = dataclasses.replace(cfg, cim_resident=True)

@@ -11,6 +11,7 @@ Caches are plain pytrees so they shard/checkpoint like params.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Any, Dict, Tuple
 
 import jax
@@ -19,7 +20,14 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.kernels import ops as kops
 from .blockwise_attention import blockwise_attention
-from .layers import _dense_init, apply_rope, rmsnorm, rmsnorm_init
+from .layers import (
+    _dense_init,
+    _lru_get,
+    apply_rope,
+    quantized_batched_matmul,
+    rmsnorm,
+    rmsnorm_init,
+)
 
 #: sequences at or above this length use the blockwise custom-VJP attention
 #: (never materializes T x T); shorter ones use the exact dense path.
@@ -52,6 +60,75 @@ def _sdpa(q, k, v, mask, scale) -> jax.Array:
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, tq, hq, d).astype(q.dtype)
+
+
+def _sdpa_quantized_core(qs, k, v, mask, n_bits: int) -> jax.Array:
+    """Quantized SDPA body staged through the CiM lowering pass.
+
+    `qs` is the PRE-SCALED query [B,Tq,Hq,D] (scale applied by the caller so
+    the lowered trace is keyed only on shapes/n_bits, never on a closed-over
+    float). Both contractions are canonical batched dot_generals — batch
+    dims (B, Hkv) map onto CiM tile rows, the grouped-query axis folds into
+    the matmul M axis — so `plan_batched_matmul` covers QK^T and AV with a
+    per-tile access count independent of batch and head count. Everything
+    between them (mask select, softmax, the layout transposes) is a host
+    island."""
+    b, tq, hq, d = qs.shape
+    tk, hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = hq // hkv
+    qg = qs.reshape(b, tq, hkv, g, d).transpose(0, 2, 3, 1, 4) \
+        .reshape(b, hkv, g * tq, d)
+    kt = k.astype(jnp.float32).transpose(0, 2, 3, 1)           # [B,Hkv,D,Tk]
+    logits = quantized_batched_matmul(qg, kt, n_bits) \
+        .reshape(b, hkv, g, tq, tk)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vt = v.astype(jnp.float32).transpose(0, 2, 1, 3)           # [B,Hkv,Tk,Dv]
+    out = quantized_batched_matmul(
+        probs.reshape(b, hkv, g * tq, tk), vt, n_bits)
+    return out.reshape(b, hkv, g, tq, dv).transpose(0, 3, 1, 2, 4) \
+        .reshape(b, tq, hq, dv)
+
+
+def _sdpa_quantized(q, k, v, mask, scale, n_bits: int = 8) -> jax.Array:
+    """Plain-JAX quantized twin of `_sdpa` — the un-lowered reference that
+    `sdpa_cim` must match bit-for-bit."""
+    qs = q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+    return _sdpa_quantized_core(qs, k, v, mask, n_bits).astype(q.dtype)
+
+
+#: bounded LRU of lowered SDPA callables (see layers._LOWERED_LINEAR)
+_LOWERED_SDPA: "OrderedDict" = OrderedDict()
+
+
+def _lowered_sdpa(n_bits: int, backend, spec, mesh, resident: bool = False):
+    from repro.cim import array
+    from repro.cim.lower import lower
+
+    return _lru_get(
+        _LOWERED_SDPA, (n_bits, backend, spec, mesh, resident),
+        lambda: lower(
+            lambda qs, k, v, mask: _sdpa_quantized_core(qs, k, v, mask,
+                                                        n_bits),
+            backend=backend, spec=spec, mesh=mesh,
+            resident_argnums=(1, 2) if resident else (),
+            resident_set=array.resident_set(spec) if resident else None))
+
+
+def sdpa_cim(q, k, v, mask, scale, n_bits: int = 8,
+             backend: str | None = None, spec=None, mesh=None,
+             resident: bool = False) -> jax.Array:
+    """Grouped SDPA with QK^T and AV executed as planned CiM schedules.
+
+    Two fused regions per call (one per contraction) — warm calls are
+    exactly two dispatches regardless of batch, heads, or context length.
+    `resident=True` pins the packed K^T/V planes by array identity: pass
+    the SAME k/v arrays across calls to skip their entry packs (decode with
+    a functionally-updated cache gets fresh arrays each step, so the serve
+    path streams KV instead — see `gqa_decode_cim`)."""
+    qs = q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+    lf = _lowered_sdpa(n_bits, backend, spec, mesh, resident)
+    return lf(qs, k, v, mask).astype(q.dtype)
 
 
 def _causal_mask(tq: int, tk: int) -> jax.Array:
@@ -152,6 +229,36 @@ def gqa_decode(p, cfg: ArchConfig, x, cache: Params, positions) -> Tuple[jax.Arr
     t_max = ck.shape[1]
     valid = jnp.arange(t_max)[None, :] <= positions[:, None]        # [B, Tmax]
     o = _sdpa(q, ck, cv, valid[:, None, :], 1.0 / cfg.head_dim ** 0.5)
+    y = jnp.einsum("bthk,hkd->btd", o, p["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, {"k": ck, "v": cv}
+
+
+def gqa_decode_cim(p, cfg: ArchConfig, x, cache: Params, positions
+                   ) -> Tuple[jax.Array, Params]:
+    """`gqa_decode` with the attention core routed through the jaxpr->CiM
+    lowering: QK^T and AV execute as planned batched schedules (two region
+    dispatches per layer per step), while rotary, softmax, and the cache
+    update stay on the host. Quantization width comes from
+    `cfg.cim_attention_bits`. KV streams into the banks each step — the
+    functional cache update makes a fresh array per token, so identity-
+    fingerprinted resident pins would churn, never hit (resident KV reuse
+    is exercised where the arrays are stable: `sdpa_cim(resident=True)`
+    with a fixed cache, as in the bench's attention section)."""
+    from .moe import _hint
+
+    pos2 = positions[:, None]
+    q, k, v = _gqa_qkv(p, cfg, x, pos2)
+    q = _hint(q, ("DP", None, None, "model"))
+    k = _hint(k, ("DP", None, None, "model"))
+    v = _hint(v, ("DP", None, None, "model"))
+    bidx = jnp.arange(x.shape[0])
+    ck = cache["k"].at[bidx, positions].set(k[:, 0])
+    cv = cache["v"].at[bidx, positions].set(v[:, 0])
+    t_max = ck.shape[1]
+    valid = jnp.arange(t_max)[None, :] <= positions[:, None]
+    o = sdpa_cim(q, ck, cv, valid[:, None, :], 1.0 / cfg.head_dim ** 0.5,
+                 n_bits=cfg.cim_attention_bits)
     y = jnp.einsum("bthk,hkd->btd", o, p["wo"],
                    preferred_element_type=jnp.float32).astype(x.dtype)
     return y, {"k": ck, "v": cv}

@@ -17,11 +17,15 @@ end-aligned query positions, and an optional local window.
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
 
 NEG = -1e30
+
+#: bounded LRU of lowered batched-matmul callables (see layers._lru_get)
+_LOWERED_BMM: "OrderedDict" = OrderedDict()
 
 
 def _mask(tq, tk, kj0, bq, bk, causal, window):
@@ -138,3 +142,85 @@ def _fwd_rule(q, k, v, causal, scale, window, block_k):
 
 
 blockwise_attention.defvjp(_fwd_rule, _bwd)
+
+
+# ---------------------------------------------------------------------------
+# Quantized blockwise attention (host reference + CiM-lowered execution)
+# ---------------------------------------------------------------------------
+
+
+def blockwise_attention_quantized(q, k, v, causal=True, scale=None, window=0,
+                                  block_k=512, n_bits=8, bmm=None):
+    """Forward-only quantized blockwise attention with a pluggable batched
+    matmul.
+
+    Same online-softmax recurrence as `_fwd`, but the per-block QK^T and AV
+    contractions go through `bmm(a, b)` on canonical [B*, M, K] x [B*, K, N]
+    operands — `quantized_batched_matmul` when `bmm` is None (the float-
+    quantized host reference), or a `lower()`-compiled twin of it for CiM
+    execution (`blockwise_attention_cim`). The kv loop is a Python loop over
+    FIXED block shapes, not a scan: every block (and every layer sharing the
+    config) presents the same two operand signatures, so the lowered bmm
+    compiles exactly two programs and replays them 2 x n_blocks times."""
+    if bmm is None:
+        def bmm(a, bb):
+            from .layers import quantized_batched_matmul
+            return quantized_batched_matmul(a, bb, n_bits)
+    b, tq, hq, d = q.shape
+    _, tk, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale_v = scale if scale is not None else 1.0 / d ** 0.5
+    bk = min(block_k, tk) if tk % min(block_k, tk) == 0 else block_k
+    kp, vp = _pad_kv(k, v, bk)
+    nk = kp.shape[1] // bk
+
+    qm = (q.astype(jnp.float32) * scale_v).reshape(b, tq, hkv, g, d) \
+        .transpose(0, 2, 3, 1, 4).reshape(b, hkv, g * tq, d)
+    m_run = jnp.full((b, hkv, g, tq), NEG, jnp.float32)
+    l_run = jnp.zeros((b, hkv, g, tq), jnp.float32)
+    acc = jnp.zeros((b, hkv, g, tq, dv), jnp.float32)
+    for j in range(nk):
+        kb = kp[:, j * bk:(j + 1) * bk].astype(jnp.float32)  # [B,bk,Hkv,D]
+        vb = vp[:, j * bk:(j + 1) * bk].astype(jnp.float32)
+        s = bmm(qm, kb.transpose(0, 2, 3, 1)) \
+            .reshape(b, hkv, g, tq, bk)                      # [B,Hkv,G,Tq,bk]
+        msk = _mask(tq, tk, j * bk, tq, bk, causal, window)
+        s = jnp.where(msk[None, None, None], s, NEG)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_run = alpha * l_run + jnp.sum(p, axis=-1)
+        pv = bmm(p.reshape(b, hkv, g * tq, bk),
+                 vb.transpose(0, 2, 1, 3)).reshape(b, hkv, g, tq, dv)
+        acc = acc * alpha[..., None] + pv
+        m_run = m_new
+    safe_l = jnp.where(l_run == 0.0, 1.0, l_run)
+    o = acc / safe_l[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, tq, hq, dv).astype(q.dtype)
+
+
+def blockwise_attention_cim(q, k, v, causal=True, scale=None, window=0,
+                            block_k=512, n_bits=8, backend=None, spec=None,
+                            mesh=None, resident=False):
+    """Blockwise attention whose integer contractions execute in the CiM
+    array: bit-exact with `blockwise_attention_quantized` on the same
+    operands, 2 dispatches per kv block, and (by the structural region key)
+    ONE compiled program per contraction shape shared across all blocks and
+    all layers."""
+    from .layers import _lru_get, quantized_batched_matmul
+
+    def make():
+        from repro.cim import array
+        from repro.cim.lower import lower
+
+        return lower(lambda a, bb: quantized_batched_matmul(a, bb, n_bits),
+                     backend=backend, spec=spec, mesh=mesh,
+                     resident_argnums=(1,) if resident else (),
+                     resident_set=array.resident_set(spec)
+                     if resident else None)
+
+    bmm = _lru_get(_LOWERED_BMM, (n_bits, backend, spec, mesh, resident),
+                   make)
+    return blockwise_attention_quantized(q, k, v, causal, scale, window,
+                                         block_k, n_bits, bmm=bmm)

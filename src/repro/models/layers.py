@@ -166,6 +166,26 @@ def _quantized_linear(x: jax.Array, w: jax.Array, n_bits: int) -> jax.Array:
     return (y.astype(jnp.float32) * (sx * sw)).reshape(lead + (f,))
 
 
+def quantized_batched_matmul(a: jax.Array, b: jax.Array,
+                             n_bits: int = 8) -> jax.Array:
+    """Per-tensor-quantized batched matmul: [*B,M,K] x [*B,K,N] -> f32.
+
+    Built on an EXPLICIT `lax.dot_general` with canonical batch dims —
+    `jnp.matmul` rewrites singleton batch axes into squeeze + transpose
+    around a non-canonical contraction, which the lowering classifier
+    (correctly) rejects. The canonical form is what `plan_batched_matmul`
+    lowers with a per-tile access count independent of the batch size."""
+    nb = a.ndim - 2
+    aq, sa = quantize_symmetric(a, n_bits)
+    bq, sb = quantize_symmetric(b, n_bits)
+    dt = _cim_int_dtype(n_bits)
+    y = jax.lax.dot_general(
+        aq.astype(dt), bq.astype(dt),
+        (((nb + 1,), (nb,)), (tuple(range(nb)), tuple(range(nb)))),
+        preferred_element_type=jnp.int32)
+    return y.astype(jnp.float32) * (sa * sb)
+
+
 def _mlp_quantized(p: Params, x: jax.Array, gating: str,
                    n_bits: int) -> jax.Array:
     """The quantized MLP as one plain JAX function — the un-lowered

@@ -153,6 +153,9 @@ def _layer_apply(
                 y, new_cache = attn.gqa_apply(p["attn"], cfg, h, positions), None
             elif mode == "prefill":
                 y, new_cache = attn.gqa_prefill(p["attn"], cfg, h, positions, max_len)
+            elif cfg.cim_attention_bits:
+                y, new_cache = attn.gqa_decode_cim(p["attn"], cfg, h, cache,
+                                                   positions)
             else:
                 y, new_cache = attn.gqa_decode(p["attn"], cfg, h, cache, positions)
         x = x + y

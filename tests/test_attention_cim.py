@@ -1,0 +1,162 @@
+"""Attention on the CiM banks: lowered SDPA / blockwise / decode parity.
+
+The quantized attention cores route QK^T and AV through batched CiM
+schedules while softmax, masking, and rotary stay host islands. These
+tests pin down: lowered-vs-host bit-exactness (the lowering must be an
+exact interpreter of the quantized reference), the warm per-call dispatch
+count (2 regions for dense SDPA, 2 per kv block for blockwise), resident
+KV reuse, the structural region cache sharing one compiled program pair
+across block counts, and `gqa_decode_cim` matching `gqa_decode` caches.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cim import dispatch
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.blockwise_attention import (blockwise_attention,
+                                              blockwise_attention_cim,
+                                              blockwise_attention_quantized)
+
+from _hypothesis_compat import HealthCheck, given, settings, st
+
+_PROP = dict(max_examples=25, deadline=None,
+             suppress_health_check=[HealthCheck.function_scoped_fixture])
+
+
+def _qkv(seed, b=2, tq=2, tk=8, hq=4, hkv=2, d=8, dv=8):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, tq, hq, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, tk, hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, tk, hkv, dv)).astype(np.float32))
+    return q, k, v
+
+
+def _causal(b, tq, tk):
+    m = jnp.arange(tq)[:, None] + (tk - tq) >= jnp.arange(tk)[None, :]
+    return jnp.broadcast_to(m[None], (b, tq, tk))
+
+
+# ---------------------------------------------------------------------------
+# dense SDPA
+# ---------------------------------------------------------------------------
+
+
+def test_sdpa_cim_bit_exact_vs_host():
+    q, k, v = _qkv(0)
+    mask = _causal(2, 2, 8)
+    scale = 1.0 / q.shape[-1] ** 0.5
+    host = attn._sdpa_quantized(q, k, v, mask, scale)
+    lowered = attn.sdpa_cim(q, k, v, mask, scale)
+    np.testing.assert_array_equal(np.asarray(lowered), np.asarray(host))
+
+
+def test_sdpa_cim_warm_dispatches_exactly_two():
+    q, k, v = _qkv(1)
+    mask = _causal(2, 2, 8)
+    attn.sdpa_cim(q, k, v, mask, 0.35)               # warm programs
+    before = dispatch.cache_stats()
+    attn.sdpa_cim(q, k, v, mask, 0.35)
+    after = dispatch.cache_stats()
+    assert after["misses"] == before["misses"]        # fully warm
+    assert after["dispatches"] - before["dispatches"] == 2   # QK^T + AV
+
+
+def test_sdpa_cim_resident_kv_hits_on_stable_cache():
+    q1, k, v = _qkv(2)
+    q2 = q1 + 1.0                                     # query varies, KV pinned
+    mask = _causal(2, 2, 8)
+    attn.sdpa_cim(q1, k, v, mask, 0.35, resident=True)
+    before = dispatch.cache_stats()
+    out = attn.sdpa_cim(q2, k, v, mask, 0.35, resident=True)
+    after = dispatch.cache_stats()
+    assert after["resident_hits"] > before["resident_hits"]
+    assert after["resident_pins"] == before["resident_pins"]
+    ref = attn._sdpa_quantized(q2, k, v, mask, 0.35)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# blockwise
+# ---------------------------------------------------------------------------
+
+
+@settings(**_PROP)
+@given(st.integers(0, 10_000), st.integers(0, 3), st.booleans())
+def test_blockwise_cim_bit_exact_property(seed, bk_idx, causal):
+    """Lowered blockwise attention is bit-exact vs the float-quantized host
+    reference across block sizes — including a block that does not divide
+    the kv length (padding path)."""
+    bk = (4, 8, 16, 12)[bk_idx]                       # 12 does not divide 16
+    q, k, v = _qkv(seed, b=1, tq=4, tk=16, hq=2, hkv=1, d=4, dv=4)
+    host = blockwise_attention_quantized(q, k, v, causal=causal, block_k=bk)
+    low = blockwise_attention_cim(q, k, v, causal=causal, block_k=bk)
+    np.testing.assert_array_equal(np.asarray(low), np.asarray(host))
+
+
+def test_blockwise_cim_structural_cache_shared_across_blocks():
+    q, k, v = _qkv(3, b=1, tq=4, tk=32, hq=2, hkv=1, d=4, dv=4)
+    blockwise_attention_cim(q, k, v, block_k=8)       # warm: nk=4 blocks
+    stats = dispatch.cache_stats()
+    before = stats["misses"], stats["dispatches"]
+    blockwise_attention_cim(q, k, v, block_k=8)
+    stats = dispatch.cache_stats()
+    # fixed block shapes: ONE compiled program pair serves all 4 blocks
+    assert stats["misses"] == before[0]
+    assert stats["dispatches"] - before[1] == 2 * 4   # (QK + AV) per block
+    # a different kv length with the SAME block shape stays warm too
+    q2, k2, v2 = _qkv(4, b=1, tq=4, tk=16, hq=2, hkv=1, d=4, dv=4)
+    blockwise_attention_cim(q2, k2, v2, block_k=8)
+    assert dispatch.cache_stats()["misses"] == before[0]
+
+
+def test_blockwise_quantized_close_to_float():
+    q, k, v = _qkv(5, b=1, tq=8, tk=8, hq=2, hkv=2, d=8, dv=8)
+    ref = blockwise_attention(q, k, v, True, None, 0, 8)
+    got = blockwise_attention_quantized(q, k, v, causal=True, block_k=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=0.08, rtol=0.0)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def _decode_cfg(**kw):
+    return ArchConfig(name="t", family="dense", n_layers=1, d_model=16,
+                      n_heads=4, n_kv_heads=2, head_dim=8, d_ff=32,
+                      vocab_size=64, dtype="float32", tensor_parallel=False,
+                      **kw)
+
+
+def test_gqa_decode_cim_matches_host_decode():
+    cfg = _decode_cfg(cim_attention_bits=8)
+    key = jax.random.PRNGKey(0)
+    p = attn.gqa_init(key, cfg, jnp.float32)
+    cache = attn.gqa_make_cache(cfg, batch=2, max_len=8, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, 16), jnp.float32)
+    positions = jnp.array([3, 5])
+    y_ref, c_ref = attn.gqa_decode(p, cfg, x, cache, positions)
+    y_cim, c_cim = attn.gqa_decode_cim(p, cfg, x, cache, positions)
+    # cache updates are identical (pure host bookkeeping on both paths)
+    np.testing.assert_array_equal(np.asarray(c_cim["k"]),
+                                  np.asarray(c_ref["k"]))
+    np.testing.assert_array_equal(np.asarray(c_cim["v"]),
+                                  np.asarray(c_ref["v"]))
+    # int8-quantized attention core: close, not bit-equal, to float SDPA
+    np.testing.assert_allclose(np.asarray(y_cim), np.asarray(y_ref),
+                               atol=0.05, rtol=0.0)
+
+
+def test_gqa_decode_cim_dispatches_per_step():
+    cfg = _decode_cfg(cim_attention_bits=8)
+    key = jax.random.PRNGKey(2)
+    p = attn.gqa_init(key, cfg, jnp.float32)
+    cache = attn.gqa_make_cache(cfg, batch=1, max_len=8, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 16), jnp.float32)
+    attn.gqa_decode_cim(p, cfg, x, cache, jnp.array([0]))   # warm
+    before = dispatch.cache_stats()["dispatches"]
+    attn.gqa_decode_cim(p, cfg, x, cache, jnp.array([1]))
+    assert dispatch.cache_stats()["dispatches"] - before == 2

@@ -1,0 +1,226 @@
+"""Batched dot_general through the CiM compiler stack.
+
+Covers the classifier (canonical [*B,M,K] x [*B,K,N] contractions only),
+`plan_batched_matmul` (per-tile access count independent of batch), the
+macro executor (batch dims flattened onto the word axis, bit-exact vs
+numpy), the lowering pass (bit-exact hybrid execution, resident batched
+rhs), and the offload estimator's `batched_dot` category — plus the edge
+shapes from the issue: batch=1 collapse, non-power-of-two K with padding,
+and uint8 vs int8 operands.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cim import array, macro, planner
+from repro.cim.accounting import LEDGER
+from repro.cim.lower import lower
+from repro.cim.trace import trace
+from repro.core.offload import analyze_trace
+from repro.models.layers import quantized_batched_matmul
+
+
+def _canon_dims(nb):
+    return (((nb + 1,), (nb,)), (tuple(range(nb)), tuple(range(nb))))
+
+
+def _rand_ints(rng, shape, dtype):
+    if dtype == jnp.uint8:
+        return jnp.asarray(rng.randint(0, 200, shape), jnp.uint8)
+    return jnp.asarray(rng.randint(-100, 100, shape), dtype)
+
+
+def _multi_ops(tr):
+    return [op for op in tr.ops if op.kind == "multi"]
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+
+def test_plan_batched_accesses_independent_of_batch():
+    base = planner.plan_batched_matmul(1, 5, 6)
+    for batch in (2, 8, 64):
+        sched = planner.plan_batched_matmul(batch, 5, 6)
+        assert sched.accesses == base.accesses
+    # and equal to the 2-D plan's schedule: batch only moves tile placement
+    assert base.accesses == planner.plan_matmul(5, 6).accesses
+
+
+def test_plan_batched_rejects_degenerate_shapes():
+    from repro.cim import opset
+
+    with pytest.raises(opset.CimOpError):
+        planner.plan_batched_matmul(0, 5, 6)
+    with pytest.raises(opset.CimOpError):
+        planner.plan_batched_matmul(2, 0, 6)
+
+
+def test_plan_batched_resident_rhs_flag():
+    sched = planner.plan_batched_matmul(2, 5, 6, resident_rhs=True)
+    assert sched.resident == ("rhs",)
+
+
+# ---------------------------------------------------------------------------
+# classifier
+# ---------------------------------------------------------------------------
+
+
+def test_classifier_batch1_collapses_to_matmul_cost():
+    def bmm3(a, b):
+        return jax.lax.dot_general(a, b, _canon_dims(1),
+                                   preferred_element_type=jnp.int32)
+
+    def mm2(a, b):
+        return jax.lax.dot_general(a, b, _canon_dims(0),
+                                   preferred_element_type=jnp.int32)
+
+    rng = np.random.RandomState(0)
+    a3 = _rand_ints(rng, (1, 4, 5), jnp.int8)
+    b3 = _rand_ints(rng, (1, 5, 6), jnp.int8)
+    op3, = _multi_ops(trace(bmm3, a3, b3))
+    op2, = _multi_ops(trace(mm2, a3[0], b3[0]))
+    assert op3.schedule.macro == "batched_matmul"
+    assert op3.accesses == op2.accesses          # batch=1: identical cost
+    assert op3.words == op2.words
+
+
+def test_classifier_rejects_non_canonical_and_mixed_dtype():
+    rng = np.random.RandomState(1)
+    a = _rand_ints(rng, (1, 4, 5), jnp.int8)
+    b = _rand_ints(rng, (1, 5, 6), jnp.int8)
+
+    # jnp.matmul rewrites a singleton batch into squeeze + a non-canonical
+    # contraction + transpose: every eqn must stay host, none may lower
+    assert not _multi_ops(trace(lambda x, y: jnp.matmul(
+        x, y, preferred_element_type=jnp.int32), a, b))
+
+    def mixed(x, y):
+        return jax.lax.dot_general(x, y.astype(jnp.int16), _canon_dims(1),
+                                   preferred_element_type=jnp.int32)
+
+    assert not _multi_ops(trace(mixed, a, b))
+
+
+def test_classifier_batched_words_scale_with_batch():
+    def bmm(a, b):
+        return jax.lax.dot_general(a, b, _canon_dims(2),
+                                   preferred_element_type=jnp.int32)
+
+    rng = np.random.RandomState(2)
+    a = _rand_ints(rng, (3, 2, 4, 5), jnp.int8)
+    b = _rand_ints(rng, (3, 2, 5, 6), jnp.int8)
+    op, = _multi_ops(trace(bmm, a, b))
+    k_pad = 8                                    # K=5 -> next pow2
+    assert op.words == 3 * 2 * 4 * k_pad * 6
+    assert op.accesses == planner.plan_batched_matmul(6, 5, 6).accesses
+
+
+# ---------------------------------------------------------------------------
+# macro executor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.uint8])
+@pytest.mark.parametrize("k", [4, 7])            # pow2 and padded K
+def test_macro_batched_matmul_matches_numpy(dtype, k):
+    # the standalone macro packs operands signed (like macro.matmul); uint8
+    # full-range goes through lower(), where signedness comes from dtype
+    rng = np.random.RandomState(3)
+    if dtype == jnp.uint8:
+        a = jnp.asarray(rng.randint(0, 128, (2, 3, k)), jnp.uint8)
+        b = jnp.asarray(rng.randint(0, 128, (2, k, 4)), jnp.uint8)
+    else:
+        a = _rand_ints(rng, (2, 3, k), dtype)
+        b = _rand_ints(rng, (2, k, 4), dtype)
+    out = macro.batched_matmul(a, b, n_bits=8, backend="jnp-boolean")
+    ref = np.einsum("bmk,bkn->bmn", np.asarray(a, np.int64),
+                    np.asarray(b, np.int64))
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_macro_batched_matmul_resident_pack_bit_exact():
+    rng = np.random.RandomState(4)
+    a = _rand_ints(rng, (2, 3, 5), jnp.int8)
+    b = _rand_ints(rng, (2, 5, 4), jnp.int8)
+    pack = macro.batched_matmul_rhs_pack(b, m=3, n_bits=8)
+    streamed = macro.batched_matmul(a, b, n_bits=8, backend="jnp-boolean")
+    pinned = macro.batched_matmul(a, n_bits=8, backend="jnp-boolean",
+                                  b_pack=pack)
+    np.testing.assert_array_equal(np.asarray(streamed), np.asarray(pinned))
+
+
+def test_macro_batched_ledger_matches_plan():
+    rng = np.random.RandomState(5)
+    a = _rand_ints(rng, (4, 2, 5), jnp.int8)
+    b = _rand_ints(rng, (4, 5, 3), jnp.int8)
+    LEDGER.reset()
+    macro.batched_matmul(a, b, n_bits=8, backend="jnp-boolean")
+    assert LEDGER.accesses == planner.plan_batched_matmul(4, 5, 3).accesses
+
+
+# ---------------------------------------------------------------------------
+# lowering + offload
+# ---------------------------------------------------------------------------
+
+
+def test_lowered_batched_quantized_bit_exact():
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.normal(size=(3, 2, 4, 5)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(3, 2, 5, 6)).astype(np.float32))
+    lf = lower(lambda x, y: quantized_batched_matmul(x, y, 8))
+    np.testing.assert_array_equal(
+        np.asarray(lf(a, b)),
+        np.asarray(quantized_batched_matmul(a, b, 8)))
+
+
+def test_lowered_uint8_nonpow2_k_bit_exact():
+    def ubmm(x, y):
+        return jax.lax.dot_general(x.astype(jnp.uint8), y.astype(jnp.uint8),
+                                   _canon_dims(1),
+                                   preferred_element_type=jnp.int32)
+
+    rng = np.random.RandomState(7)
+    a = jnp.asarray(rng.randint(0, 200, (2, 3, 7)), jnp.int32)
+    b = jnp.asarray(rng.randint(0, 200, (2, 7, 4)), jnp.int32)
+    lf = lower(ubmm)
+    ref = np.einsum("bmk,bkn->bmn", np.asarray(a, np.int64),
+                    np.asarray(b, np.int64))
+    np.testing.assert_array_equal(np.asarray(lf(a, b)), ref)
+
+
+def test_offload_reports_batched_dot_category():
+    def bmm(a, b):
+        return jax.lax.dot_general(a, b, _canon_dims(1),
+                                   preferred_element_type=jnp.int32)
+
+    rng = np.random.RandomState(8)
+    a = _rand_ints(rng, (2, 3, 5), jnp.int8)
+    b = _rand_ints(rng, (2, 5, 4), jnp.int8)
+    tr = trace(bmm, a, b)
+    rep = analyze_trace(tr)
+    assert rep.op_histogram == {"batched_dot": 1}
+    assert rep.multi_access_ops == 1
+    # the rhs (KV side under attention) is pinnable: one savable load
+    assert rep.resident_savable_accesses == 1
+    assert rep.adra_accesses == planner.plan_batched_matmul(2, 5, 4).accesses
+
+
+def test_resident_batched_rhs_pins_once_then_hits():
+    rng = np.random.default_rng(9)
+    a = jnp.asarray(rng.normal(size=(2, 3, 4, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(2, 3, 8, 6)).astype(np.float32))
+    rs = array.ResidentSet(array.ArraySpec())
+    lf = lower(lambda x, y: quantized_batched_matmul(x, y, 8),
+               resident_argnums=(1,), resident_set=rs)
+    comp = lf.trace(a, b)
+    (ra,), = [r.resident for r in comp.regions if r.resident]
+    assert ra.kind == "batched_matmul_rhs"
+    ref = quantized_batched_matmul(a, b, 8)
+    out1 = lf(a, b)
+    out2 = lf(a, b)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(ref))
+    assert rs.pins == 1 and rs.hits == 1
