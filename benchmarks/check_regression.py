@@ -50,7 +50,7 @@ import sys
 COUNTER_KEYS = ("accesses", "ledger_accesses", "banked_accesses", "waves",
                 "dispatches", "load_accesses", "total_accesses",
                 "accesses_per_token", "load_accesses_per_token",
-                "total_accesses_per_token")
+                "total_accesses_per_token", "searches")
 
 #: wall-clock latency keys, gated only against baseline * --latency-factor
 LATENCY_KEYS = ("p99_ms",)

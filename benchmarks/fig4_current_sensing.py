@@ -15,10 +15,13 @@ def rows():
         out.append(("fig4a_cim_component", comp, energy.to_fj(val), ""))
     for size, r in energy.sweep("current").items():
         out.append(("fig4b_energy_decrease_pct", size, r.energy_decrease_pct,
-                    "paper@1024: 41.18"))
-        out.append(("fig4c_speedup", size, r.speedup, "paper@1024: 1.94"))
+                    energy.anchor_note("current", "energy_decrease_pct",
+                                       at_1024=True)))
+        out.append(("fig4c_speedup", size, r.speedup,
+                    energy.anchor_note("current", "speedup", at_1024=True)))
         out.append(("fig4_edp_decrease_pct", size, r.edp_decrease_pct,
-                    "paper@1024: 69.04"))
+                    energy.anchor_note("current", "edp_decrease_pct",
+                                       at_1024=True)))
     return out
 
 

@@ -12,13 +12,13 @@ def rows():
         out.append(("fig5a_energy_vs_freq", f"{f_mhz}MHz",
                     e["scheme1"], e["scheme2"]))
     out.append(("fig5a_crossover_mhz", "-", energy.frequency_crossover_hz() / 1e6,
-                "paper: 7.53"))
+                energy.anchor_note("crossover", "frequency_mhz")))
     for p in (0.1, 0.25, 0.42, 0.5, 0.75, 1.0):
         e = energy.scheme_energies_vs_parallelism(p)
         out.append(("fig5b_energy_vs_parallelism", f"P={p}",
                     e["scheme1"], e["scheme2"]))
     out.append(("fig5b_crossover_P", "-", energy.parallelism_crossover(),
-                "paper: ~0.42"))
+                energy.anchor_note("crossover", "parallelism")))
     return out
 
 

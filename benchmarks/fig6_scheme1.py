@@ -13,13 +13,16 @@ def rows():
         out.append(("fig6a_cim_component", comp, energy.to_fj(val), ""))
     out.append(("fig6a_bitline_ratio_cim_over_read", 1024,
                 r.cim.breakdown["bitline"] / r.read.breakdown["bitline"],
-                "paper: 3x (6 Delta vs 2 Delta)"))
+                energy.anchor_note("scheme1", "bitline_ratio_cim_over_read",
+                                   suffix="x (6 Delta vs 2 Delta)")))
     for size, r in energy.sweep("scheme1").items():
         out.append(("fig6b_energy_decrease_pct", size, r.energy_decrease_pct,
-                    "paper: -20..-23 (CiM costs more)"))
-        out.append(("fig6c_speedup", size, r.speedup, "paper: 1.57-1.73"))
+                    energy.anchor_note("scheme1", "energy_decrease_pct",
+                                       suffix=" (CiM costs more)")))
+        out.append(("fig6c_speedup", size, r.speedup,
+                    energy.anchor_note("scheme1", "speedup")))
         out.append(("fig6_edp_decrease_pct", size, r.edp_decrease_pct,
-                    "paper: 23.26-28.81"))
+                    energy.anchor_note("scheme1", "edp_decrease_pct")))
     return out
 
 

@@ -13,10 +13,11 @@ def rows():
         out.append(("fig7a_cim_component", comp, energy.to_fj(val), ""))
     for size, r in energy.sweep("scheme2").items():
         out.append(("fig7b_energy_decrease_pct", size, r.energy_decrease_pct,
-                    "paper: 35.5-45.8"))
-        out.append(("fig7c_speedup", size, r.speedup, "paper: 1.945-1.983"))
+                    energy.anchor_note("scheme2", "energy_decrease_pct")))
+        out.append(("fig7c_speedup", size, r.speedup,
+                    energy.anchor_note("scheme2", "speedup")))
         out.append(("fig7_edp_decrease_pct", size, r.edp_decrease_pct,
-                    "paper: 66.83-72.6"))
+                    energy.anchor_note("scheme2", "edp_decrease_pct")))
     return out
 
 

@@ -22,17 +22,32 @@ def main():
     if not cells:
         print("no dry-run artifacts found; run: python -m repro.launch.sweep")
         return
-    print("arch,shape,mesh,status,t_compute_s,t_memory_s,t_collective_s,"
-          "bottleneck,model_flops,useful_ratio,roofline_fraction")
+    # the device column is the shared DeviceSpec the dry-run's roofline
+    # terms were computed under (repro.cim.cost.DeviceSpec provenance in
+    # the artifact); artifacts from before the provenance field fall back
+    # to the default device's name
+    try:
+        from repro.cim.cost import DEFAULT_DEVICE
+        fallback_device = DEFAULT_DEVICE.name
+    except ImportError:            # run without PYTHONPATH=src
+        fallback_device = "tpu-v5e"
+
+    print("arch,shape,mesh,device,status,t_compute_s,t_memory_s,"
+          "t_collective_s,bottleneck,model_flops,useful_ratio,"
+          "roofline_fraction")
     for d in cells:
+        dev = (d.get("roofline") or {}).get("device") \
+            or (d.get("device") or {}).get("name") or fallback_device
         if "skipped" in d:
-            print(f"{d['arch']},{d['shape']},{d.get('mesh','-')},skipped(N/A),,,,,,,")
+            print(f"{d['arch']},{d['shape']},{d.get('mesh','-')},{dev},"
+                  f"skipped(N/A),,,,,,,")
             continue
         if d.get("status") != "ok":
-            print(f"{d['arch']},{d['shape']},{d.get('mesh','-')},ERROR,,,,,,,")
+            print(f"{d['arch']},{d['shape']},{d.get('mesh','-')},{dev},"
+                  f"ERROR,,,,,,,")
             continue
         r = d["roofline"]
-        print(f"{d['arch']},{d['shape']},{d['mesh']},ok,"
+        print(f"{d['arch']},{d['shape']},{d['mesh']},{dev},ok,"
               f"{r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
               f"{r['t_collective_s']:.3e},{r['bottleneck']},"
               f"{r['model_flops']:.3e},{r['useful_flops_ratio']:.3f},"

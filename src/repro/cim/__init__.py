@@ -31,6 +31,13 @@ any registered backend:
                 launch/mesh meshes
   trace       — jaxpr -> CiM IR: eqn-level eligibility classification
                 shared by the offload estimator and the executor
+  cost        — spec-driven cost model: DeviceSpec host roofline vs CiM
+                energy/latency/EDP per eqn, and the offload policy that
+                decides (per eqn, with fusion-boundary re-evaluation)
+                whether lowering pays at all
+  autotune    — geometry/bits autotuner: cost-model-pruned, walltime-
+                confirmed search over tile shape x banks x scheme, winners
+                in a bounded LRU persistable to JSON
   lower       — the lowering compiler: fuse eligible eqn runs into region
                 Schedules, execute them through ChainExecutor, run the
                 rest on the host — offload estimates become execution
@@ -42,7 +49,9 @@ is the execution engine every caller dispatches through.
 from . import (  # noqa: F401
     accounting,
     array,
+    autotune,
     backends,
+    cost,
     dispatch,
     engine,
     lower as lower_mod,
@@ -61,7 +70,19 @@ from .array import (  # noqa: F401
     resident_set,
     resident_stats,
 )
+from .autotune import Autotuner, Candidate, TuneResult  # noqa: F401
+from .cost import (  # noqa: F401
+    DEFAULT_DEVICE,
+    DEFAULT_POLICY,
+    POLICIES,
+    DeviceSpec,
+    EqnVerdict,
+    OffloadPlan,
+    cim_wins_table,
+    plan_offload,
+)
 from .dispatch import (  # noqa: F401
+    BoundedLRU,
     cache_stats,
     clear_schedule_cache,
     execute_sharded,

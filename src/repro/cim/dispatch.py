@@ -65,6 +65,71 @@ from collections import OrderedDict
 #: tile shapes would otherwise grow the program table without bound.
 _DEFAULT_CAPACITY = 256
 
+
+class BoundedLRU:
+    """Move-to-front bounded mapping with hit/miss/eviction counters — the
+    schedule-program table's caching policy, factored out so other
+    structural-key caches (the autotuner's winners table) share one
+    implementation. An insert past capacity evicts the coldest entry;
+    correctness must never depend on residency."""
+
+    def __init__(self, capacity: int = _DEFAULT_CAPACITY):
+        if capacity < 1:
+            raise opset.CimOpError(
+                f"cache capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._data: "OrderedDict[object, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key, default=None):
+        """Look up, counting a hit (and refreshing recency) or a miss.
+        Callers that miss MUST build and `put` under the same key."""
+        if key in self._data:
+            self.hits += 1
+            self._data.move_to_end(key)
+            return self._data[key]
+        self.misses += 1
+        return default
+
+    def put(self, key, value) -> None:
+        self._data[key] = value
+        self._data.move_to_end(key)
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self.evictions += 1
+
+    def set_capacity(self, capacity: int) -> None:
+        if capacity < 1:
+            raise opset.CimOpError(
+                f"cache capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._data.clear()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def items(self):
+        return self._data.items()
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._data), "evictions": self.evictions,
+                "capacity": self.capacity}
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+
 _PROGRAMS: "OrderedDict[tuple, object]" = OrderedDict()
 
 

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import cost as cost_mod
 from . import macro, planner
 from . import array as array_mod
 from . import trace as trace_mod
@@ -364,13 +365,19 @@ class LoweredComputation:
                  backend: Optional[str] = None,
                  spec: Optional[ArraySpec] = None, mesh=None,
                  resident_leaf_idx: Tuple[int, ...] = (),
-                 resident_set=None):
+                 resident_set=None, policy: Optional[str] = None,
+                 device=None):
         self.trace = tr
         self.backend = backend
         self.spec = spec
         self.mesh = mesh
         self.resident_leaf_idx = tuple(resident_leaf_idx)
         self.resident_set = resident_set
+        # the cost model decides, per eligible eqn, whether lowering pays
+        # under `policy` (repro.cim.cost); demoted eqns run on host
+        self.offload_plan = cost_mod.plan_offload(
+            tr, spec=spec, device=device, policy=policy)
+        self.policy = self.offload_plan.policy
         self.items: List[Tuple[str, Any]] = []
         self.regions: List[Region] = []
         self._warm_skip: frozenset = frozenset()
@@ -404,8 +411,9 @@ class LoweredComputation:
                 items.append(("region", region))
             buf.clear()
 
-        for op in self.trace.ops:
-            if op.eligible:
+        demoted = self.offload_plan.demoted
+        for i, op in enumerate(self.trace.ops):
+            if op.eligible and i not in demoted:
                 buf.append(op)
             else:
                 flush()
@@ -824,9 +832,17 @@ class LoweredComputation:
         return sum(1 for kind, _ in self.items if kind == "host")
 
     def describe(self) -> str:
+        plan = self.offload_plan
         lines = [f"lowered: {len(self.regions)} CiM region(s), "
                  f"{self.host_eqns} host eqn(s), "
-                 f"{self.accesses} planned accesses"]
+                 f"{self.accesses} planned accesses "
+                 f"[policy={plan.policy}, {plan.demoted_eqns} demoted, "
+                 f"{plan.fused_losses} kept fused despite loss]"]
+        for v in plan.verdicts:
+            if v.index in plan.demoted:
+                lines.append(f"  demoted eqn#{v.index} {v.name} "
+                             f"({v.accesses} accesses): {v.reason} "
+                             f"(margin {100 * v.margin:+.1f}%)")
         for r in self.regions:
             segs = ", ".join(f"{name}:{n}" for name, n in
                              (r.schedule.segments or ()))
@@ -849,13 +865,16 @@ class LoweredFunction:
     def __init__(self, fn, backend: Optional[str] = None,
                  spec: Optional[ArraySpec] = None, mesh=None,
                  resident_argnums: Tuple[int, ...] = (),
-                 resident_set=None):
+                 resident_set=None, policy: Optional[str] = None,
+                 device=None):
         self.fn = fn
         self.backend = backend
         self.spec = spec
         self.mesh = mesh
         self.resident_argnums = tuple(resident_argnums)
         self.resident_set = resident_set
+        self.policy = cost_mod.normalize_policy(policy)
+        self.device = device
         if self.resident_argnums and self.resident_set is None:
             self.resident_set = array_mod.resident_set(spec)
         self._cache: "OrderedDict[Any, LoweredComputation]" = OrderedDict()
@@ -887,7 +906,8 @@ class LoweredFunction:
                 trace_mod.trace(self.fn, *args), backend=self.backend,
                 spec=self.spec, mesh=self.mesh,
                 resident_leaf_idx=self._resident_leaf_idx(args),
-                resident_set=self.resident_set)
+                resident_set=self.resident_set, policy=self.policy,
+                device=self.device)
             self._cache[key] = comp
             while len(self._cache) > SIGNATURE_CACHE_CAPACITY:
                 self._cache.popitem(last=False)
@@ -902,7 +922,8 @@ class LoweredFunction:
 def lower(fn, backend: Optional[str] = None,
           spec: Optional[ArraySpec] = None, mesh=None,
           resident_argnums: Tuple[int, ...] = (),
-          resident_set=None) -> LoweredFunction:
+          resident_set=None, policy: Optional[str] = None,
+          device=None) -> LoweredFunction:
     """Compile `fn` into a hybrid CiM/host callable (see module docstring).
 
     backend : CiM backend name for the fused regions (registry default
@@ -919,7 +940,15 @@ def lower(fn, backend: Optional[str] = None,
               SAME weight arrays each call to stay warm.
     resident_set : the ResidentSet to pin into (the process-wide registry
               set for `spec` when omitted).
+    policy  : offload policy (repro.cim.cost): "edp" (default, alias
+              "cost") lowers an eqn only when its projected CiM EDP beats
+              the near-memory baseline; "latency" compares against the
+              DeviceSpec host roofline; "always" reproduces the
+              pre-cost-model behavior bit-exactly; "never" demotes all.
+    device  : DeviceSpec for the host side of the comparison
+              (cost.DEFAULT_DEVICE — a v5e chip — when None).
     """
     return LoweredFunction(fn, backend=backend, spec=spec, mesh=mesh,
                            resident_argnums=resident_argnums,
-                           resident_set=resident_set)
+                           resident_set=resident_set, policy=policy,
+                           device=device)

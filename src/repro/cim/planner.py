@@ -86,6 +86,14 @@ class Schedule:
         tiles = self.placement.n_tiles if self.placement else 1
         return len(self.steps) * tiles
 
+    @property
+    def placed_waves(self) -> int:
+        """Serialized wave count when placed (accesses * waves per step —
+        the critical path the cost model's latency term charges); logical
+        accesses when not."""
+        waves = self.placement.waves if self.placement else 1
+        return len(self.steps) * waves
+
     def placed(self, spec: ArraySpec, n_words: int) -> "Schedule":
         """The same schedule carrying its tile placement on `spec`."""
         return dataclasses.replace(self, placement=spec.plan(n_words))

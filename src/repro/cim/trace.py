@@ -137,6 +137,40 @@ def _intlike(aval) -> bool:
             or jnp.issubdtype(aval.dtype, jnp.integer))
 
 
+def host_flops(op: "TracedOp") -> int:
+    """Scalar-op count an XLA host execution of this eqn performs — the
+    roofline numerator for the cost model (repro.cim.cost). Elementwise
+    ops count one op per output element; dot_general counts the standard
+    2*(out elements)*K."""
+    if op.prim is None or not op.outvars:
+        return 0
+    out = aval_of(op.outvars[0])
+    if op.name == "dot_general":
+        k = int(aval_of(op.invars[0]).shape[-1])
+        return 2 * _numel(out.shape) * k
+    return _numel(out.shape)
+
+
+def host_io_bits(op: "TracedOp") -> int:
+    """Bits moved through HBM if this eqn ran alone on the host: every
+    operand read once plus every result written once, at true element
+    widths (accumulate bits, round to bytes ONCE at the consumer — the
+    PR-4 sub-byte-dtype convention)."""
+    bits = 0
+    for v in tuple(op.invars) + tuple(op.outvars):
+        if not hasattr(v, "aval"):
+            continue
+        aval = aval_of(v)
+        if not hasattr(aval, "shape"):
+            continue
+        try:
+            b = dtype_bits(aval.dtype)
+        except Exception:
+            b = aval.dtype.itemsize * 8
+        bits += _numel(aval.shape) * b
+    return bits
+
+
 def _numel(shape) -> int:
     n = 1
     for d in shape:

@@ -106,6 +106,11 @@ class OffloadReport:
     #                                  dot-rhs (repro.cim.lower resident mode)
     #                                  removes from every warm call
     source: str = "hlo"
+    policy: str = "always"           # offload policy the report was cut under
+    demoted_eqns: int = 0            # eligible eqns the cost model kept on host
+    demoted_accesses: int = 0        # planned accesses those demotions remove
+    fused_losses: int = 0            # losing eqns kept fused (pack/unpack toll)
+    eqn_verdicts: tuple = ()         # cost.EqnVerdict per eligible eqn (jaxpr)
 
     @property
     def eligible_fraction(self) -> float:
@@ -124,12 +129,18 @@ class OffloadReport:
 
 
 def analyze(fn, *args, scheme: str = "current", rows: int = 1024,
-            spec=None, source: str = "jaxpr") -> OffloadReport:
+            spec=None, source: str = "jaxpr", policy: str = "always",
+            device=None) -> OffloadReport:
     """Project ADRA savings for `fn` called with example `args`.
 
     source="jaxpr" (default) analyzes the traced eqn list shared with the
     lowering compiler; source="hlo" compiles through XLA and falls back to
-    the regex scan of `analyze_hlo`.
+    the regex scan of `analyze_hlo`. `policy`/`device` select the offload
+    policy (repro.cim.cost) the projection is cut under — the default
+    "always" preserves the historical project-everything report; pass the
+    policy actually given to `lower()` to project the DECIDED offload
+    (demoted eqns drop out of the access counts, mirroring the executed
+    ledger).
     """
     if source == "hlo":
         import jax
@@ -146,16 +157,25 @@ def analyze(fn, *args, scheme: str = "current", rows: int = 1024,
     from repro.cim.trace import trace
 
     return analyze_trace(trace(fn, *args), scheme=scheme, rows=rows,
-                         spec=spec)
+                         spec=spec, policy=policy, device=device)
 
 
 def analyze_trace(tr, scheme: str = "current", rows: int = 1024,
-                  spec=None) -> OffloadReport:
+                  spec=None, policy: str = "always",
+                  device=None) -> OffloadReport:
     """OffloadReport from a `repro.cim.trace.Trace` — the estimator half of
-    the shared-eligibility contract (see module docstring)."""
+    the shared-eligibility contract (see module docstring). The offload
+    decision and the per-eqn word accounting come from repro.cim.cost's
+    `plan_offload` — the SAME call the lowering compiler makes — so the
+    report's demotion list is the executor's demotion list."""
     # lazy imports break the core<->cim module cycle
+    from repro.cim import cost as cost_mod
     from repro.cim.accounting import project_savings
     from repro.cim.trace import aval_of, dtype_bits
+
+    plan = cost_mod.plan_offload(tr, spec=spec, scheme=scheme, rows=rows,
+                                 device=device, policy=policy)
+    demoted = plan.demoted
 
     hist: Dict[str, int] = {}
     eligible_bits = 0
@@ -179,13 +199,11 @@ def analyze_trace(tr, scheme: str = "current", rows: int = 1024,
 
     _HIST_NAMES = {"mul": "multiply", "dot_general": "dot",
                    "population_count": "popcount"}
-    # streamed-operand load estimate per op kind: how many fresh operand
-    # packs the region body would drive into rows if NOTHING were memoized
-    # (binary ops: 2, unary reductions: 1). An upper bound by construction.
-    _LOADS = {"reduce_sum": 1, "population_count": 1}
-    for op in tr.ops:
+    for i, op in enumerate(tr.ops):
         if not op.eligible or op.accesses == 0:
             continue                 # free peripherals do no array work
+        if i in demoted:
+            continue                 # the cost model keeps this eqn on host
         bits = op.n_bits
         n_ops += 1
         adra_accesses += op.accesses
@@ -197,7 +215,12 @@ def analyze_trace(tr, scheme: str = "current", rows: int = 1024,
             name = "batched_dot"
         hist[name] = hist.get(name, 0) + 1
         place(op.words, op.accesses)
-        stream_loads += _LOADS.get(op.name, 2)
+        # words32 and streamed loads come from the cost model's shared
+        # per-eqn accounting (one implementation, two consumers); the
+        # stream-load count is an upper bound by construction (region
+        # fusion memoizes entry packs)
+        words32 += cost_mod.eqn_words32(op)
+        stream_loads += cost_mod.eqn_stream_loads(op)
         if op.name == "dot_general":
             # a pinnable rhs removes exactly its side of the dot's loads —
             # for batched_dot that side is the K^T / V operand (the KV
@@ -209,14 +232,11 @@ def analyze_trace(tr, scheme: str = "current", rows: int = 1024,
             out_bits = dtype_bits(out_aval.dtype)
             # two operand reads + the result write, at true element widths
             eligible_bits += (2 * bits + out_bits) * op.words
-            words32 += op.words * bits / 32.0
             continue
 
         n_multi += 1
         planner_accesses += op.accesses
         if op.name == "mul":
-            # shift-and-add works at the 2n-bit product width every access
-            words32 += op.accesses * op.words * (2 * bits) / 32.0
             eligible_bits += 3 * op.words * bits
         elif op.name == "dot_general":
             lhs = aval_of(op.invars[0])
@@ -225,13 +245,10 @@ def analyze_trace(tr, scheme: str = "current", rows: int = 1024,
             out_nel = 1
             for d in out.shape:
                 out_nel *= int(d)
-            words32 += op.accesses * op.words * (2 * bits) / 32.0
             eligible_bits += out_nel * k * 2 * bits + out_nel * 32
         elif op.name == "reduce_sum":
-            words32 += op.accesses * op.words * bits / 32.0
             eligible_bits += op.words * bits + 32
         else:                        # population_count
-            words32 += op.accesses * op.words * bits / 32.0
             eligible_bits += 2 * op.words * bits
 
     # total traffic estimate: every aval the program touches, once
@@ -272,6 +289,11 @@ def analyze_trace(tr, scheme: str = "current", rows: int = 1024,
         stream_load_accesses=stream_loads,
         resident_savable_accesses=resident_savable,
         source="jaxpr",
+        policy=plan.policy,
+        demoted_eqns=plan.demoted_eqns,
+        demoted_accesses=plan.demoted_accesses,
+        fused_losses=plan.fused_losses,
+        eqn_verdicts=plan.verdicts,
     )
 
 

@@ -150,15 +150,18 @@ def analyze(compiled, lowered, meta: dict) -> dict:
     # XLA cost_analysis counts scan bodies once (verified empirically), so
     # the compiled numbers undercount the layer stack: take the max of the
     # HLO-derived and analytic models per term (both recorded).
+    device = rl.DEFAULT_DEVICE
     terms = rl.RooflineTerms(
         flops_global=max(flops_pp * n_chips, meta["analytic_flops"]),
         bytes_global=max(bytes_pp * n_chips, meta["analytic_bytes"]),
         collective_bytes_per_chip=coll.total_bytes,
         n_chips=n_chips,
         model_flops=meta["model_flops"],
+        device=device,
     )
     out = {
         **meta,
+        "device": device.to_dict(),
         "memory": {
             "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
             "output_bytes": getattr(mem, "output_size_in_bytes", None),

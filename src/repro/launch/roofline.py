@@ -1,10 +1,12 @@
 """Roofline-term extraction from compiled dry-run artifacts.
 
-Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+Three terms per (arch x shape x mesh), in seconds, from a shared
+`repro.cim.cost.DeviceSpec` (default: the TPU v5e constants below —
+another target is one CSV row away via `DeviceSpec.from_csv`):
 
-  compute    = HLO_FLOPs_global   / (chips * 197e12 FLOP/s bf16)
-  memory     = HLO_bytes_global   / (chips * 819e9  B/s HBM)
-  collective = collective_bytes   / (chips * 50e9   B/s ICI per chip)
+  compute    = HLO_FLOPs_global   / (chips * peak_flops)   [197e12 bf16]
+  memory     = HLO_bytes_global   / (chips * hbm_bw)       [819e9  B/s]
+  collective = collective_bytes   / ici_bw                 [50e9   B/s]
 
 HLO_FLOPs / bytes come from compiled.cost_analysis() (per-partition module
 under SPMD -> multiplied by n_devices for the global figure). Collective
@@ -17,19 +19,25 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict
+from typing import Dict, Optional
 
-PEAK_FLOPS = 197e12          # bf16 per chip
-HBM_BW = 819e9               # B/s per chip
-ICI_BW = 50e9                # B/s per chip (~1 link)
+from repro.cim.cost import DEFAULT_DEVICE, DeviceSpec
+
+#: module-level aliases kept for callers that predate DeviceSpec
+PEAK_FLOPS = DEFAULT_DEVICE.peak_flops   # bf16 per chip
+HBM_BW = DEFAULT_DEVICE.hbm_bw           # B/s per chip
+ICI_BW = DEFAULT_DEVICE.ici_bw           # B/s per chip (~1 link)
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
-    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+#: element widths in BITS — s4/u4 are sub-byte, so per-element byte widths
+#: would be fractional; accumulate bits per instruction and round ONCE (the
+#: same convention as the PR-4 offload estimator fix)
+_DTYPE_BITS = {
+    "pred": 8, "s4": 4, "u4": 4, "s8": 8, "u8": 8, "s16": 16, "u16": 16,
+    "s32": 32, "u32": 32, "s64": 64, "u64": 64, "f8e4m3fn": 8, "f8e5m2": 8,
+    "bf16": 16, "f16": 16, "f32": 32, "f64": 64, "c64": 64, "c128": 128,
     "token": 0, "opaque": 0,
 }
 
@@ -40,18 +48,21 @@ _INSTR_RE = re.compile(
 )
 
 
-def _shape_bytes(shape_str: str) -> float:
-    total = 0.0
+def _shape_bytes(shape_str: str) -> int:
+    """Byte size of one instruction's output shape (tuples summed), rounded
+    up from exact bit totals once per instruction — an s4[7] is 4 bytes,
+    never a fractional 3.5 leaking into the symbol table."""
+    bits = 0
     for m in _SHAPE_RE.finditer(shape_str):
         dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
+        if dt not in _DTYPE_BITS:
             continue
         n = 1
         if dims:
             for d in dims.split(","):
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+        bits += n * _DTYPE_BITS[dt]
+    return -(-bits // 8)
 
 
 @dataclasses.dataclass
@@ -124,18 +135,23 @@ class RooflineTerms:
     collective_bytes_per_chip: float
     n_chips: int
     model_flops: float
+    device: Optional[DeviceSpec] = None    # DEFAULT_DEVICE when None
+
+    @property
+    def _dev(self) -> DeviceSpec:
+        return self.device or DEFAULT_DEVICE
 
     @property
     def t_compute(self) -> float:
-        return self.flops_global / (self.n_chips * PEAK_FLOPS)
+        return self.flops_global / (self.n_chips * self._dev.peak_flops)
 
     @property
     def t_memory(self) -> float:
-        return self.bytes_global / (self.n_chips * HBM_BW)
+        return self.bytes_global / (self.n_chips * self._dev.hbm_bw)
 
     @property
     def t_collective(self) -> float:
-        return self.collective_bytes_per_chip / ICI_BW
+        return self.collective_bytes_per_chip / self._dev.ici_bw
 
     @property
     def bottleneck(self) -> str:
@@ -151,12 +167,13 @@ class RooflineTerms:
     def roofline_fraction(self) -> float:
         """useful-FLOPs time / achievable step time (max of the 3 terms):
         the headline 'fraction of roofline' figure."""
-        t_useful = self.model_flops / (self.n_chips * PEAK_FLOPS)
+        t_useful = self.model_flops / (self.n_chips * self._dev.peak_flops)
         t_step = max(self.t_compute, self.t_memory, self.t_collective)
         return t_useful / max(t_step, 1e-30)
 
     def to_dict(self) -> Dict[str, float]:
         return {
+            "device": self._dev.name,
             "flops_global": self.flops_global,
             "bytes_global": self.bytes_global,
             "collective_bytes_per_chip": self.collective_bytes_per_chip,

@@ -301,6 +301,11 @@ class ServeEngine:
                 led.load_accesses / per_tok, 4)
             report["total_accesses_per_token"] = round(
                 led.total_accesses / per_tok, 4)
+            # cost-model offload decisions cut while lowering this run
+            # (deliberately NOT perf-gated keys: verdict counts change
+            # whenever the policy or cost calibration does)
+            from repro.cim import cost as _cost
+            report["offload"] = dict(_cost.PLAN_STATS)
         return report
 
     def _retire(self, req: ServeRequest, free, active, t: float) -> None:
@@ -326,10 +331,12 @@ def _requests(args) -> List[ServeRequest]:
 
 def _fresh_cim_state() -> None:
     from repro.cim import clear_schedule_cache
+    from repro.cim import cost as _cost
     from repro.cim.array import clear_resident
     _ledger().reset()
     clear_resident()
     clear_schedule_cache()
+    _cost.reset_plan_stats()
 
 
 def _serve_once(model, params, args) -> Dict[str, Any]:
@@ -371,6 +378,12 @@ def _print_cim_report(tag: str) -> None:
           f"{cs.get('resident_hits', 0)} hits / "
           f"{cs.get('resident_evictions', 0)} evictions, "
           f"{cs.get('resident_rows', 0)} rows held")
+    from repro.cim import cost as _cost
+    ps = _cost.PLAN_STATS
+    print(f"  offload policy: {ps['plans']} plans cut, "
+          f"{ps['eqns_lowered']} eqns lowered / {ps['eqns_demoted']} "
+          f"demoted ({ps['demoted_accesses']} accesses kept on host), "
+          f"{ps['fused_despite_loss']} losing eqns kept fused")
 
 
 def main():

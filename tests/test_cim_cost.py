@@ -1,0 +1,511 @@
+"""Cost-model + autotuner tests (repro.cim.cost / repro.cim.autotune).
+
+The projection/execution contract: the cost model's per-eqn access and
+wave counts are built from the SAME TilePlan quantities the ledger
+charges, so for any random composed graph the projected banked access
+count equals the executed ledger count EXACTLY, and the projected wave
+count equals the busiest bank slot's activation count. (words32 is
+asserted against the shared estimator accounting, not the executed
+ledger — executed reduce steps charge widened intermediate widths the
+jaxpr-level projection deliberately does not model.)
+
+Policy contract: `policy="always"` is bit-exact with the pre-cost-model
+lowering including dispatch counts; the default "edp" policy demotes a
+projected-losing (pad-dominated) placement to host, still bit-exact,
+with the verdict visible in the OffloadReport.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cim import ArraySpec, lower
+from repro.cim.accounting import LEDGER
+from repro.cim.autotune import (
+    DEFAULT_CANDIDATE,
+    Autotuner,
+    Candidate,
+    steady_ms,
+)
+from repro.cim.cost import (
+    DEFAULT_DEVICE,
+    DEFAULT_POLICY,
+    POLICIES,
+    DeviceSpec,
+    cim_wins_rows,
+    normalize_policy,
+    plan_offload,
+)
+from repro.cim.dispatch import BoundedLRU, cache_stats
+from repro.cim.opset import CimOpError
+from repro.cim.trace import trace
+from repro.core.offload import analyze
+
+from _hypothesis_compat import HealthCheck, given, settings, st
+
+_PROP = dict(max_examples=10, deadline=None,
+             suppress_health_check=[HealthCheck.function_scoped_fixture])
+
+# <= 16-bit dtypes: the property spec has 128 rows, and a mul's 2n-bit
+# product planes must fit them (an int32 product needs 192)
+DTYPES = (jnp.int8, jnp.int16, jnp.uint8, jnp.uint16)
+
+
+def _operand(dtype, n_words, seed):
+    info = jnp.iinfo(dtype)
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(int(info.min), int(info.max) + 1,
+                                   n_words, dtype=np.int64).astype(
+                                       np.dtype(dtype.dtype
+                                                if hasattr(dtype, "dtype")
+                                                else dtype)))
+
+
+def _assert_tree_equal(got, want):
+    import jax
+
+    got_l = jax.tree_util.tree_leaves(got)
+    want_l = jax.tree_util.tree_leaves(want)
+    assert len(got_l) == len(want_l)
+    for g, w in zip(got_l, want_l):
+        assert g.dtype == w.dtype, (g.dtype, w.dtype)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# DeviceSpec: dict/CSV round trips
+# ---------------------------------------------------------------------------
+
+
+def test_device_spec_dict_roundtrip():
+    d = DeviceSpec(name="lab-chip", peak_flops=1e12, hbm_bw=1e11,
+                   ici_bw=1e10, pj_per_flop=0.7, pj_per_byte=15.0)
+    assert DeviceSpec.from_dict(d.to_dict()) == d
+    assert d.key == tuple(d.to_dict().values())
+    with pytest.raises(ValueError):
+        DeviceSpec.from_dict({"name": "x", "warp_drive": 9000})
+
+
+def test_device_spec_csv_roundtrip(tmp_path):
+    path = tmp_path / "devices.csv"
+    path.write_text(
+        "name,peak_flops,hbm_bw,ici_bw,pj_per_flop,pj_per_byte\n"
+        "tpu-v5e,197e12,819e9,50e9,0.5,20.0\n"
+        "sim-a,1e12,1e11,1e10,0.9,30.0\n")
+    first = DeviceSpec.from_csv(str(path))
+    assert first == DEFAULT_DEVICE
+    other = DeviceSpec.from_csv(str(path), name="sim-a")
+    assert other.name == "sim-a" and other.pj_per_byte == 30.0
+    with pytest.raises(ValueError):
+        DeviceSpec.from_csv(str(path), name="nope")
+    (tmp_path / "empty.csv").write_text("name\n")
+    with pytest.raises(ValueError):
+        DeviceSpec.from_csv(str(tmp_path / "empty.csv"))
+
+
+def test_normalize_policy():
+    assert normalize_policy(None) == DEFAULT_POLICY
+    assert normalize_policy("cost") == "edp"
+    for p in POLICIES:
+        assert normalize_policy(p) == p
+    with pytest.raises(ValueError):
+        normalize_policy("yolo")
+
+
+# ---------------------------------------------------------------------------
+# projection == execution: access/wave parity on random banked graphs
+# ---------------------------------------------------------------------------
+
+_N_STEP_KINDS = 8
+
+
+def _apply_step(kind, sel, vals):
+    x = vals[sel % len(vals)]
+    y = vals[(sel // 7) % len(vals)]
+    if x.dtype != y.dtype:
+        y = y.astype(x.dtype)
+    k = kind % _N_STEP_KINDS
+    if k == 0:
+        return x + y
+    if k == 1:
+        return x - y
+    if k == 2:
+        return x * y
+    if k == 3:
+        return jnp.bitwise_xor(x, y)
+    if k == 4:
+        return jnp.minimum(x, y)
+    if k == 5:
+        return jnp.maximum(x, y)
+    if k == 6:
+        return jnp.where(x < y, x, y)
+    return x + jnp.sum(x)              # k == 7: tree reduce + rebroadcast
+
+
+def _random_fn(steps):
+    def fn(a, b):
+        vals = [a, b]
+        for kind, sel in steps:
+            vals.append(_apply_step(kind, sel, vals))
+        return tuple(vals[-2:])
+    return fn
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(DTYPES) - 1),
+       st.integers(1, 5))
+@settings(**_PROP)
+def test_projected_counts_equal_executed_banked_ledger(seed, dtype_idx,
+                                                       n_steps):
+    """For any random graph on a banked spec, the cost model's projected
+    access count (sum of per-eqn banked accesses) equals the executed
+    ledger EXACTLY, and the projected critical path (sum of per-eqn waves)
+    equals the busiest bank slot's activation count."""
+    rng = np.random.RandomState(seed)
+    dtype = DTYPES[dtype_idx]
+    steps = [(int(rng.randint(0, _N_STEP_KINDS)), int(rng.randint(0, 10_000)))
+             for _ in range(n_steps)]
+    fn = _random_fn(steps)
+    a = _operand(dtype, 96, seed)
+    b = _operand(dtype, 96, seed + 1)
+    spec = ArraySpec(banks=2, subarrays=1, rows=128, bitline_words=32)
+
+    plan = plan_offload(trace(fn, a, b), spec=spec, policy="always")
+    est_accesses = sum(v.banked_accesses for v in plan.verdicts)
+    est_waves = sum(v.waves for v in plan.verdicts)
+
+    lf = lower(fn, backend="jnp-boolean", spec=spec, policy="always")
+    LEDGER.reset()
+    _assert_tree_equal(lf(a, b), fn(a, b))
+    assert LEDGER.accesses == est_accesses
+    assert max(LEDGER.bank_accesses.values(), default=0) == est_waves
+
+
+def test_projected_words_match_estimator_accounting():
+    """The verdict's words32 is the shared estimator accounting — the same
+    number analyze() reports per eqn (executed reduce ledgers differ by
+    widened intermediate widths, so parity is defined at this layer)."""
+    def fn(a, b):
+        return (a + b) * b, jnp.sum(a)
+
+    a = jnp.arange(-32, 32, dtype=jnp.int16)
+    plan = plan_offload(trace(fn, a, a), policy="always")
+    rep = analyze(fn, a, a)
+    assert rep.eqn_verdicts == plan.verdicts
+    assert sum(v.words32 for v in plan.verdicts) > 0
+    assert rep.adra_accesses == sum(v.accesses for v in plan.verdicts)
+
+
+# ---------------------------------------------------------------------------
+# policy semantics through the lowering compiler
+# ---------------------------------------------------------------------------
+
+_SLIVER_SPEC = ArraySpec(banks=2, subarrays=1, rows=1024, bitline_words=32)
+
+
+def _sliver_args():
+    a = jnp.array([3, -9, 5, 7], jnp.int16)
+    return a, 5 - a
+
+
+def test_default_policy_demotes_pad_dominated_shape():
+    """4 useful words on 32-word tiles (12% utilization): the default edp
+    policy keeps the eqn on the host — zero accesses — and the result is
+    still bit-exact via host execution."""
+    def fn(a, b):
+        return a + b
+
+    a, b = _sliver_args()
+    lf = lower(fn, backend="jnp-boolean", spec=_SLIVER_SPEC)
+    comp = lf.trace(a, b)
+    assert comp.policy == "edp"
+    assert comp.accesses == 0
+    assert len(comp.regions) == 0
+    assert comp.offload_plan.demoted_eqns == 1
+    v = comp.offload_plan.verdict_for(0)
+    assert v is not None and not v.lowers and v.margin < 0
+    assert "loses" in v.reason
+    assert "demoted" in comp.describe()
+    _assert_tree_equal(lf(a, b), fn(a, b))
+
+    forced = lower(fn, backend="jnp-boolean", spec=_SLIVER_SPEC,
+                   policy="always")
+    comp_f = forced.trace(a, b)
+    assert comp_f.accesses == 1 and len(comp_f.regions) == 1
+    _assert_tree_equal(forced(a, b), fn(a, b))
+
+
+def test_demotion_visible_in_offload_report():
+    def fn(a, b):
+        return a + b
+
+    a, b = _sliver_args()
+    rep = analyze(fn, a, b, spec=_SLIVER_SPEC, policy="edp")
+    assert rep.policy == "edp"
+    assert rep.demoted_eqns == 1
+    assert rep.demoted_accesses == 1
+    assert any(not v.lowers for v in rep.eqn_verdicts)
+    # the report's historical default remains the un-demoted projection
+    rep_always = analyze(fn, a, b, spec=_SLIVER_SPEC)
+    assert rep_always.policy == "always" and rep_always.demoted_eqns == 0
+
+
+def test_always_policy_bit_exact_with_default_on_winning_shapes():
+    """On fully-utilized tiles the edp default demotes nothing, so default
+    and policy='always' produce identical results AND identical dispatch
+    counts — the acceptance bar for 'no behavior change on winners'."""
+    def fn(a, b):
+        t = (a + b) * b
+        p = t < a
+        return jnp.where(p, t, a), jnp.sum(t)
+
+    a = jnp.arange(-64, 64, dtype=jnp.int16)
+    b = 5 - a
+    spec = ArraySpec(banks=2, subarrays=1, rows=128, bitline_words=32)
+
+    counts = {}
+    for policy in (None, "always"):
+        lf = lower(fn, backend="jnp-boolean", spec=spec, policy=policy)
+        comp = lf.trace(a, b)
+        before = cache_stats()["dispatches"]
+        out = lf(a, b)
+        counts[policy] = (comp.accesses,
+                          cache_stats()["dispatches"] - before)
+        _assert_tree_equal(out, fn(a, b))
+    assert counts[None] == counts["always"]
+    assert counts[None][0] > 0
+
+
+def test_never_policy_hosts_everything():
+    def fn(a, b):
+        return (a + b) ^ a
+
+    a = jnp.arange(-16, 16, dtype=jnp.int16)
+    lf = lower(fn, backend="jnp-boolean", policy="never")
+    comp = lf.trace(a, a)
+    assert comp.accesses == 0 and len(comp.regions) == 0
+    assert comp.offload_plan.demoted_eqns == 2
+    _assert_tree_equal(lf(a, a), fn(a, a))
+
+
+def test_latency_policy_demotes_host_winning_sliver():
+    """Physical-units policy: 4 words cannot amortize the array's access
+    latency against a ~200 TFLOP/s roofline, so 'latency' hosts them."""
+    def fn(a, b):
+        return a + b
+
+    a, b = _sliver_args()
+    lf = lower(fn, backend="jnp-boolean", policy="latency")
+    comp = lf.trace(a, b)
+    assert comp.accesses == 0
+    v = comp.offload_plan.verdict_for(0)
+    assert not v.lowers and v.host_time_s < v.cim_time_s
+    _assert_tree_equal(lf(a, b), fn(a, b))
+
+
+# ---------------------------------------------------------------------------
+# fusion-boundary re-evaluation: the sandwich cases
+# ---------------------------------------------------------------------------
+
+
+def test_interior_loser_kept_fused_when_toll_dominates():
+    """win / lose / win where 2048 packed words32 cross the loser: hosting
+    it would unpack+repack all of them, so the plan keeps it fused and
+    marks the verdict fused=True (still lowers=False)."""
+    def fn(a, s):
+        t = a + a          # eqn 0: 4096 words, full tiles -> wins
+        u = s * s          # eqn 1: 4 words, 12% utilized -> loses
+        v = t ^ a          # eqn 2: consumes t ACROSS eqn 1 -> toll
+        return u, v
+
+    a = jnp.arange(4096, dtype=jnp.int16)
+    s = jnp.array([3, -9, 5, 7], jnp.int16)
+    plan = plan_offload(trace(fn, a, s), spec=_SLIVER_SPEC, policy="edp")
+    assert plan.demoted_eqns == 0
+    assert plan.fused_losses == 1
+    v1 = plan.verdict_for(1)
+    assert v1.fused and not v1.lowers
+
+    lf = lower(fn, backend="jnp-boolean", spec=_SLIVER_SPEC)
+    comp = lf.trace(a, s)
+    assert len(comp.regions) == 1          # the sandwich stays one region
+    assert "kept fused" in comp.describe()
+    _assert_tree_equal(lf(a, s), fn(a, s))
+
+
+def test_interior_loser_splits_run_when_nothing_crosses():
+    """Same loser, but no value crosses it: the toll is zero, so the run
+    splits around the demoted eqn and both winning halves still lower."""
+    def fn(a, s):
+        t = a + a          # eqn 0: wins
+        u = s * s          # eqn 1: loses, nothing crosses
+        v = a ^ a          # eqn 2: wins, consumes only inputs
+        return t, u, v
+
+    a = jnp.arange(4096, dtype=jnp.int16)
+    s = jnp.array([3, -9, 5, 7], jnp.int16)
+    plan = plan_offload(trace(fn, a, s), spec=_SLIVER_SPEC, policy="edp")
+    assert 1 in plan.demoted
+    assert plan.fused_losses == 0
+    assert plan.verdict_for(0).lowers and plan.verdict_for(2).lowers
+
+    lf = lower(fn, backend="jnp-boolean", spec=_SLIVER_SPEC)
+    comp = lf.trace(a, s)
+    assert len(comp.regions) == 2          # split around the hosted eqn
+    _assert_tree_equal(lf(a, s), fn(a, s))
+
+
+def test_schedule_placed_waves_is_the_cost_models_critical_path():
+    """Schedule.placed_waves (planner) == accesses x TilePlan.waves — the
+    latency term project_eqn charges, and the number the executed ledger's
+    busiest bank slot reaches."""
+    from repro.cim import planner
+
+    spec = ArraySpec(banks=2, subarrays=1, rows=128, bitline_words=32)
+    sched = planner.plan_multiply(8, 8)
+    n_words = 96
+    assert sched.placed_waves == len(sched.steps)          # unplaced: 1 wave
+    placed = sched.placed(spec, n_words)
+    assert placed.placed_waves == \
+        len(sched.steps) * spec.plan(n_words).waves
+
+    def fn(a, b):
+        return a * b
+
+    a = _operand(jnp.int8, n_words, 3)
+    b = _operand(jnp.int8, n_words, 4)
+    plan = plan_offload(trace(fn, a, b), spec=spec, policy="always")
+    v = max(plan.verdicts, key=lambda x: x.accesses)
+    assert v.waves == placed.placed_waves
+
+
+def test_cim_wins_rows_shapes():
+    rows = cim_wins_rows()
+    assert len(rows) == 3
+    assert rows[0]["lowers"] and rows[1]["lowers"]
+    assert not rows[2]["lowers"]
+    assert rows[2]["edp_margin_pct"] < 0 < rows[0]["edp_margin_pct"]
+
+
+# ---------------------------------------------------------------------------
+# BoundedLRU (the shared cache policy)
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_lru_bound_and_counters():
+    lru = BoundedLRU(capacity=2)
+    lru.put("a", 1)
+    lru.put("b", 2)
+    assert lru.get("a") == 1           # refresh a
+    lru.put("c", 3)                    # evicts b (coldest)
+    assert len(lru) == 2
+    assert "b" not in lru and "a" in lru and "c" in lru
+    assert lru.get("b") is None
+    s = lru.stats()
+    assert s["evictions"] == 1 and s["hits"] == 1 and s["misses"] == 1
+    assert s["capacity"] == 2 and s["entries"] == 2
+    lru.clear()
+    assert len(lru) == 0 and lru.stats()["hits"] == 0
+    with pytest.raises(CimOpError):
+        BoundedLRU(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+
+def _tune_fn():
+    def fn(a, b):
+        return (a + b) * b
+
+    a = jnp.arange(-32, 32, dtype=jnp.int16)
+    return fn, (a, 5 - a)
+
+
+_SMALL_CANDIDATES = (
+    Candidate(banks=2, subarrays=2, bitline_words=1024),
+    Candidate(banks=4, subarrays=4, bitline_words=1024, scheme="scheme2"),
+)
+
+
+def test_autotune_predict_only_deterministic():
+    fn, args = _tune_fn()
+    tuner = Autotuner()
+    r1 = tuner.tune(fn, args, candidates=_SMALL_CANDIDATES,
+                    backend="jnp-boolean", measure=False)
+    assert tuner.searches == 1 and not r1.from_cache
+    assert repr(DEFAULT_CANDIDATE) in r1.predicted_edp
+    assert r1.predicted_edp[repr(r1.winner)] <= \
+        r1.predicted_edp[repr(DEFAULT_CANDIDATE)]
+    assert r1.tuned_vs_default_edp_ratio >= 1.0
+
+    r2 = Autotuner().tune(fn, args, candidates=_SMALL_CANDIDATES,
+                          backend="jnp-boolean", measure=False)
+    assert r2.winner == r1.winner and r2.predicted_edp == r1.predicted_edp
+
+
+def test_autotune_measured_never_regresses_default():
+    fn, args = _tune_fn()
+    tuner = Autotuner()
+    res = tuner.tune(fn, args, candidates=_SMALL_CANDIDATES,
+                     backend="jnp-boolean", steady_n=1)
+    assert res.default_ms is not None and res.tuned_ms is not None
+    assert res.tuned_ms <= res.default_ms
+    assert res.tuned_vs_default_walltime_ratio >= 1.0
+    assert res.tuned_vs_default_edp_ratio >= 1.0
+    assert res.measured_ms                    # at least the default measured
+
+
+def test_autotune_warm_cache_skips_search():
+    fn, args = _tune_fn()
+    tuner = Autotuner()
+    cold = tuner.tune(fn, args, candidates=_SMALL_CANDIDATES,
+                      backend="jnp-boolean", measure=False)
+    assert tuner.searches == 1
+    warm = tuner.tune(fn, args, candidates=_SMALL_CANDIDATES,
+                      backend="jnp-boolean", measure=False)
+    assert warm.from_cache and warm.winner == cold.winner
+    assert warm.key == cold.key
+    assert tuner.searches == 1                # zero re-searches
+    assert tuner.winners.stats()["hits"] == 1
+
+
+def test_autotune_winners_json_roundtrip(tmp_path):
+    fn, args = _tune_fn()
+    tuner = Autotuner()
+    cold = tuner.tune(fn, args, candidates=_SMALL_CANDIDATES,
+                      backend="jnp-boolean", measure=False)
+    path = str(tmp_path / "winners.json")
+    tuner.save(path)
+
+    fresh = Autotuner()
+    assert fresh.load(path) == 1
+    warm = fresh.tune(fn, args, candidates=_SMALL_CANDIDATES,
+                      backend="jnp-boolean", measure=False)
+    assert warm.from_cache and warm.winner == cold.winner
+    assert fresh.searches == 0                # the whole point of the file
+
+    other = Autotuner(device=DeviceSpec(name="not-this-chip"))
+    with pytest.raises(ValueError):
+        other.load(path)
+
+
+def test_autotune_winners_table_is_bounded():
+    tuner = Autotuner(capacity=1)
+    fn1, args1 = _tune_fn()
+
+    def fn2(a, b):
+        return a - b
+
+    tuner.tune(fn1, args1, candidates=(), backend="jnp-boolean",
+               measure=False)
+    tuner.tune(fn2, args1, candidates=(), backend="jnp-boolean",
+               measure=False)
+    assert len(tuner.winners) == 1            # first winner evicted
+    assert tuner.winners.stats()["evictions"] == 1
+
+
+def test_steady_ms_counts_only_steady_calls():
+    calls = []
+    ms = steady_ms(lambda: calls.append(1), n=3)
+    assert len(calls) == 4                    # 1 warmup + 3 timed
+    assert ms >= 0.0

@@ -42,6 +42,51 @@ def test_collective_parser_tuple_shapes():
     assert st.bytes_by_op["all-reduce"] == 4 * 4 * 2 + 2 * 4
 
 
+def test_shape_bytes_subbyte_dtypes_round_once():
+    """4-bit dtypes contribute exact bit totals, rounded up to bytes ONCE
+    per instruction — s4[7] is 4 bytes, never a fractional 3.5."""
+    assert rl._shape_bytes("s4[7]") == 4           # 28 bits -> ceil 4
+    assert rl._shape_bytes("u4[8]") == 4           # exact 32 bits
+    assert rl._shape_bytes("s4[101]") == 51        # 404 bits -> ceil 51
+    # tuples accumulate bits BEFORE the single round-up
+    assert rl._shape_bytes("(s4[1], s4[1])") == 1  # 8 bits, not 1+1
+    assert rl._shape_bytes("(s4[3], u4[3])") == 3  # 24 bits, not 2+2
+    assert rl._shape_bytes("bf16[4,4]") == 32
+    assert rl._shape_bytes("token[]") == 0
+
+
+def test_collective_parser_s4_operands():
+    hlo = ("%q = s4[101]{0} parameter(0)\n"
+           "%ag = s4[101]{0} all-gather(%q), replica_groups={}\n")
+    st = rl.collective_bytes(hlo)
+    assert st.bytes_by_op["all-gather"] == 51      # ceil(101*4/8)
+
+
+def test_roofline_terms_accept_device_spec_override():
+    from repro.cim.cost import DeviceSpec
+
+    slow = DeviceSpec(name="half-speed", peak_flops=rl.PEAK_FLOPS / 2,
+                      hbm_bw=rl.HBM_BW / 2, ici_bw=rl.ICI_BW)
+    base = rl.RooflineTerms(flops_global=197e12, bytes_global=819e9,
+                            collective_bytes_per_chip=0.0, n_chips=1,
+                            model_flops=197e12)
+    over = rl.RooflineTerms(flops_global=197e12, bytes_global=819e9,
+                            collective_bytes_per_chip=0.0, n_chips=1,
+                            model_flops=197e12, device=slow)
+    assert over.t_compute == pytest.approx(2 * base.t_compute)
+    assert over.t_memory == pytest.approx(2 * base.t_memory)
+    assert base.to_dict()["device"] == "tpu-v5e"
+    assert over.to_dict()["device"] == "half-speed"
+
+
+def test_module_constants_come_from_default_device():
+    from repro.cim.cost import DEFAULT_DEVICE
+
+    assert rl.PEAK_FLOPS == DEFAULT_DEVICE.peak_flops
+    assert rl.HBM_BW == DEFAULT_DEVICE.hbm_bw
+    assert rl.ICI_BW == DEFAULT_DEVICE.ici_bw
+
+
 def test_roofline_terms_and_bottleneck():
     t = rl.RooflineTerms(flops_global=197e12 * 256, bytes_global=819e9,
                          collective_bytes_per_chip=50e9, n_chips=256,

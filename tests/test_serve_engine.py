@@ -174,3 +174,30 @@ def test_engine_single_token_requests(small_model):
     rep, requests = _run(model, params, slots=2, reqs=2, gen=1)
     assert all(r.done and len(r.tokens) == 1 for r in requests)
     assert rep["decode_tokens"] == 0 and rep["decode_steps"] == 0
+
+
+def test_engine_report_surfaces_offload_plan_stats():
+    """With cim_lower the report carries the cost model's offload decision
+    counters (repro.cim.cost.PLAN_STATS): plans were cut for the lowered
+    decode, every eligible eqn of the unbanked paths wins under the
+    default edp policy, and the counters mirror the module state."""
+    from repro.cim import cost as cost_mod
+    from repro.configs.base import ArchConfig
+
+    cfg = ArchConfig(name="serve-offload-test", family="dense", n_layers=1,
+                     d_model=16, n_heads=4, n_kv_heads=2, head_dim=8,
+                     d_ff=32, vocab_size=64, dtype="float32",
+                     tensor_parallel=False, cim_mlp_bits=8,
+                     cim_attention_bits=8, cim_unroll_groups=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    cost_mod.reset_plan_stats()
+    engine = ServeEngine(model, params, slots=1, max_len=4, cim_lower=True,
+                         warmup_steps=0)
+    rep = engine.run([ServeRequest(rid=0, prompt_len=2, gen=2)])
+    off = rep["offload"]
+    assert off == cost_mod.PLAN_STATS
+    assert off["plans"] > 0
+    assert off["eqns_lowered"] > 0
+    # unbanked placements always win the edp comparison: nothing demoted
+    assert off["eqns_demoted"] == 0 and off["demoted_accesses"] == 0
