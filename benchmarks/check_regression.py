@@ -50,7 +50,14 @@ import sys
 COUNTER_KEYS = ("accesses", "ledger_accesses", "banked_accesses", "waves",
                 "dispatches", "load_accesses", "total_accesses",
                 "accesses_per_token", "load_accesses_per_token",
-                "total_accesses_per_token", "searches")
+                "total_accesses_per_token", "searches",
+                # fault/ECC health: ANY growth over the committed zero
+                # baseline means data loss the SECDED planes could not
+                # repair — never acceptable on a deterministic seed
+                "fault_uncorrected", "ecc_uncorrected",
+                # ECC traffic is charged separately from the gated load
+                # counters; pin its access counts too
+                "ecc_accesses", "pin_ecc_accesses", "verify_ecc_accesses")
 
 #: wall-clock latency keys, gated only against baseline * --latency-factor
 LATENCY_KEYS = ("p99_ms",)

@@ -601,15 +601,103 @@ def autotune_section(metrics):
     }
 
 
+def ecc_section(metrics):
+    """SECDED protection of resident operands: parity-plane row overhead
+    vs an unprotected pin (5/8 at int8 — pinned by the baseline), the
+    ledger's separated ECC charges (plain `charge_load` is asserted
+    UNCHANGED so gated access counts stay valid), and a seeded single-bit
+    fault campaign where every injected flip is corrected on `get()` with
+    the logical values intact — `uncorrected` must stay ZERO (the
+    never-grow counter check_regression gates). Fresh local ResidentSets,
+    ledger deltas, and try/finally fault teardown keep the --twice
+    contract: both passes replay identically with zero engine dispatches."""
+    from repro.cim import faults
+    from repro.cim.accounting import LEDGER
+    from repro.cim.array import ResidentSet
+    from repro.cim.cost import ecc_overhead
+    from repro.cim.planepack import ecc_plane_count
+
+    spec = ArraySpec(banks=4, subarrays=1, rows=256, bitline_words=32)
+    n_bits, n_words = 8, 128
+    rng = np.random.RandomState(3)
+    x = jnp.array(rng.randint(-128, 128, n_words), jnp.int8)
+    pack = PlanePack.pack(x, n_bits)
+    n_parity = ecc_plane_count(n_bits)
+
+    plain = ResidentSet(spec)
+    prot = ResidentSet(spec, ecc=True)
+    acc0, w320 = LEDGER.load_accesses, LEDGER.load_words32
+    ecc0, eccw0 = LEDGER.ecc_accesses, LEDGER.ecc_words32
+    plain.pin(("w",), pack)
+    load_acc = LEDGER.load_accesses - acc0
+    load_w32 = LEDGER.load_words32 - w320
+    prot.pin(("w",), pack)
+    # the protected pin pays the IDENTICAL plain load + a separate ECC charge
+    assert load_acc > 0, LEDGER
+    assert LEDGER.load_accesses - acc0 == 2 * load_acc, LEDGER
+    pin_ecc_acc = LEDGER.ecc_accesses - ecc0
+    pin_ecc_w32 = LEDGER.ecc_words32 - eccw0
+    plain_rows = sum(plain.rows_per_bank().values())
+    prot_rows = sum(prot.rows_per_bank().values())
+    row_ratio = prot_rows / plain_rows - 1.0
+    assert abs(row_ratio - ecc_overhead(n_bits)) < 1e-9, (row_ratio, n_bits)
+
+    n_verifies = 16
+    with faults.faults(faults.FaultConfig(seed=23, resident_ber=1e-3)) as fm:
+        for _ in range(n_verifies):
+            entry = prot.get(("w",))
+            assert entry is not None, "uncorrectable under single-bit BER"
+        assert np.array_equal(np.asarray(entry.pack.unpack()),
+                              np.asarray(x, np.int32)), "values corrupted"
+    assert fm.injected > 0 and fm.corrected == fm.injected, fm.stats()
+    assert fm.uncorrected == 0, fm.stats()
+    verify_ecc_acc = LEDGER.ecc_accesses - ecc0 - pin_ecc_acc
+    plain.clear()
+    prot.clear()
+
+    print(f"ecc_parity_planes,{n_bits},{n_parity},"
+          f"SECDED planes per {n_bits} data planes")
+    print(f"ecc_row_overhead_ratio,{n_words},{row_ratio:.4f},"
+          f"parity rows / data rows (cost.ecc_overhead)")
+    print(f"ecc_pin_charge_words32,{n_words},{pin_ecc_w32:.1f},"
+          f"ledger ECC words32 for one pin; plain load charge unchanged")
+    print(f"ecc_verify_accesses,{n_verifies},{verify_ecc_acc},"
+          f"parity reads per warm get")
+    print(f"ecc_injected,{n_verifies},{fm.injected},"
+          f"seeded single-bit flips over {n_verifies} verifies")
+    print(f"ecc_corrected,{n_verifies},{fm.corrected},"
+          f"must equal injected")
+    print(f"ecc_uncorrected,{n_verifies},{fm.uncorrected},"
+          f"must stay zero (never-grow gate)")
+    metrics["ecc"] = {
+        "n_bits": n_bits,
+        "n_words": n_words,
+        "parity_planes": n_parity,
+        "row_overhead_ratio": row_ratio,
+        "cost_overhead_ratio": ecc_overhead(n_bits),
+        "load_accesses": load_acc,
+        "load_words32": load_w32,
+        "pin_ecc_accesses": pin_ecc_acc,
+        "pin_ecc_words32": pin_ecc_w32,
+        "verify_ecc_accesses": verify_ecc_acc,
+        "verifies": n_verifies,
+        "fault_injected": fm.injected,
+        "fault_corrected": fm.corrected,
+        "fault_uncorrected": fm.uncorrected,
+        "ecc_uncorrected": fm.uncorrected,
+    }
+
+
 #: canonical section order; the `kernel` alias groups the substrate
 #: sections so CI can run one step per gate-relevant unit
 SECTIONS = (("engine", engine_section), ("macro", macro_section),
             ("bank_sweep", bank_sweep_section),
             ("lowering", lowering_section),
             ("attention", attention_section),
-            ("autotune", autotune_section))
+            ("autotune", autotune_section),
+            ("ecc", ecc_section))
 SECTION_ALIASES = {"all": ("engine", "macro", "bank_sweep", "lowering",
-                           "attention", "autotune"),
+                           "attention", "autotune", "ecc"),
                    "kernel": ("engine", "macro", "bank_sweep")}
 
 

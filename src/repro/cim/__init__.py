@@ -54,6 +54,7 @@ from . import (  # noqa: F401
     cost,
     dispatch,
     engine,
+    faults,
     lower as lower_mod,
     macro,
     opset,
@@ -67,8 +68,18 @@ from .array import (  # noqa: F401
     ResidentSet,
     TilePlan,
     clear_resident,
+    current_spec,
     resident_set,
     resident_stats,
+    set_current_spec,
+    set_resident_ecc,
+)
+from .faults import (  # noqa: F401
+    FaultConfig,
+    FaultModel,
+    UncorrectableFaultError,
+    fault_seed,
+    fault_stats,
 )
 from .autotune import Autotuner, Candidate, TuneResult  # noqa: F401
 from .cost import (  # noqa: F401

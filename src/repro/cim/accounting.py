@@ -57,6 +57,17 @@ class Ledger:
     load_words32       : word-equivalents written by operand loads.
     resident_reuses    : resident-operand reuses (entry pack skipped).
     resident_words32   : word-equivalents those reuses did NOT re-write.
+    ecc_accesses       : parity-plane accesses (extra row writes at pin
+                         time, parity reads per verify/scrub) — the
+                         protection overhead, kept out of total_accesses so
+                         compute/load bills are comparable with ECC off.
+    ecc_words32        : word-equivalents those parity planes moved.
+    fault_injected     : bits flipped into live data by the fault overlay.
+    fault_detected     : bits an ECC verify saw (corrected + uncorrected).
+    fault_corrected    : bits SECDED repaired in place.
+    fault_uncorrected  : bits detected but NOT repairable — the entry was
+                         invalidated and rebuilt; a nonzero steady-state
+                         value is data loss and is gated never-grow in CI.
     """
 
     accesses: int = 0
@@ -70,6 +81,12 @@ class Ledger:
     load_words32: float = 0.0
     resident_reuses: int = 0
     resident_words32: float = 0.0
+    ecc_accesses: int = 0
+    ecc_words32: float = 0.0
+    fault_injected: int = 0
+    fault_detected: int = 0
+    fault_corrected: int = 0
+    fault_uncorrected: int = 0
     enabled: bool = True
 
     @property
@@ -133,6 +150,25 @@ class Ledger:
             return
         self.resident_reuses += 1
         self.resident_words32 += n_words * n_bits / 32.0
+
+    def charge_ecc(self, n_parity_bits: int, n_words: int,
+                   n_tiles: int = 1) -> None:
+        """Parity-plane traffic of ECC protection: the extra rows written
+        at pin time and the parity reads of each verify/scrub pass."""
+        if not self.enabled:
+            return
+        self.ecc_accesses += n_tiles
+        self.ecc_words32 += n_words * n_parity_bits / 32.0
+
+    def charge_fault(self, injected: int = 0, detected: int = 0,
+                     corrected: int = 0, uncorrected: int = 0) -> None:
+        """Fault-campaign outcome bits (see repro.cim.faults)."""
+        if not self.enabled:
+            return
+        self.fault_injected += injected
+        self.fault_detected += detected
+        self.fault_corrected += corrected
+        self.fault_uncorrected += uncorrected
 
     def reset(self) -> None:
         """Restore every counter to its dataclass default.

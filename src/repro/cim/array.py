@@ -51,12 +51,19 @@ class ArraySpec:
                      bitline column in the transposed bit-serial layout);
                      must be a multiple of 32 so tiles align with the packed
                      uint32 lanes of PlanePack.
+    disabled_banks : banks taken out of service (whole-bank failures).
+                     Placement round-robins over the ENABLED banks only;
+                     the default () keeps degraded and healthy specs
+                     distinct hashable values, so every spec-keyed cache
+                     (compiled programs, resident-set registry, lowered
+                     callables) naturally separates the two.
     """
 
     banks: int = 4
     subarrays: int = 4
     rows: int = 1024
     bitline_words: int = 1024
+    disabled_banks: Tuple[int, ...] = ()
 
     def __post_init__(self):
         if self.banks < 1 or self.subarrays < 1 or self.rows < 1:
@@ -65,6 +72,32 @@ class ArraySpec:
             raise opset.CimOpError(
                 f"bitline_words must be a positive multiple of 32 (packed "
                 f"uint32 lanes), got {self.bitline_words}")
+        dead = tuple(sorted(set(int(b) for b in self.disabled_banks)))
+        if any(b < 0 or b >= self.banks for b in dead):
+            raise opset.CimOpError(
+                f"disabled_banks {dead} outside [0, {self.banks})")
+        if len(dead) >= self.banks:
+            raise opset.CimOpError(
+                f"every bank of {self} disabled: nothing left to remap to")
+        object.__setattr__(self, "disabled_banks", dead)
+
+    @property
+    def enabled_banks(self) -> Tuple[int, ...]:
+        """Live bank ids, in order — what placement round-robins over."""
+        if not self.disabled_banks:
+            return tuple(range(self.banks))
+        dead = set(self.disabled_banks)
+        return tuple(b for b in range(self.banks) if b not in dead)
+
+    @property
+    def n_enabled(self) -> int:
+        return self.banks - len(self.disabled_banks)
+
+    def disable_bank(self, bank: int) -> "ArraySpec":
+        """The degraded spec with `bank` also dead (raises via __post_init__
+        when that would leave no live banks)."""
+        return dataclasses.replace(
+            self, disabled_banks=self.disabled_banks + (int(bank),))
 
     @property
     def tile_words(self) -> int:
@@ -73,8 +106,8 @@ class ArraySpec:
 
     @property
     def parallel_words(self) -> int:
-        """Words the whole array serves per wave (all banks active)."""
-        return self.banks * self.tile_words
+        """Words the whole array serves per wave (all LIVE banks active)."""
+        return self.n_enabled * self.tile_words
 
     def check_fits(self, n_bits: int, ops: Sequence[str],
                    resident_rows: int = 0) -> None:
@@ -96,21 +129,35 @@ class ArraySpec:
             raise opset.CimOpError(f"cannot place {n_words} words")
         n_tiles = -(-n_words // self.tile_words)
         return TilePlan(n_words=n_words, tile_words=self.tile_words,
-                        n_tiles=n_tiles, banks=self.banks)
+                        n_tiles=n_tiles, banks=self.banks,
+                        enabled=(self.enabled_banks
+                                 if self.disabled_banks else ()))
 
 
 @dataclasses.dataclass(frozen=True)
 class TilePlan:
     """Placement of an operand pair onto a banked array: tile t covers words
-    [t * tile_words, (t+1) * tile_words) and runs on bank `t % banks` during
-    wave `(t // banks)` — round-robin, the layout that balances banks best
-    for contiguous operands. Static and hashable: it is part of the
+    [t * tile_words, (t+1) * tile_words) and runs on the t-th live bank in
+    round-robin order during wave `t // n_live` — the layout that balances
+    banks best for contiguous operands. `enabled` names the live banks of a
+    DEGRADED array (dead banks are skipped, waves stretch accordingly); the
+    default () means all `banks` are live, so healthy plans hash and compare
+    exactly as before. Static and hashable: it is part of the
     compiled-schedule cache key."""
 
     n_words: int
     tile_words: int
     n_tiles: int
     banks: int
+    enabled: Tuple[int, ...] = ()
+
+    @property
+    def live_banks(self) -> Tuple[int, ...]:
+        return self.enabled if self.enabled else tuple(range(self.banks))
+
+    @property
+    def n_live(self) -> int:
+        return len(self.enabled) if self.enabled else self.banks
 
     @property
     def lanes_per_tile(self) -> int:
@@ -119,7 +166,7 @@ class TilePlan:
     @property
     def waves(self) -> int:
         """Sequential activations on the busiest bank (the critical path)."""
-        return -(-self.n_tiles // self.banks)
+        return -(-self.n_tiles // self.n_live)
 
     @property
     def pad_words(self) -> int:
@@ -127,27 +174,34 @@ class TilePlan:
         return self.n_tiles * self.tile_words - self.n_words
 
     def bank_of(self, tile: int) -> int:
-        return tile % self.banks
+        """Physical bank of tile `tile` — never a disabled bank."""
+        live = self.live_banks
+        return live[tile % len(live)]
 
     def bank_counts(self, n_devices: int = 1) -> Dict[Tuple[int, int], int]:
         """Activations per (device, bank) — what the ledger charges.
 
         Closed-form: device d owns the contiguous tile block [d*per_dev,
-        min((d+1)*per_dev, n_tiles)) and bank b takes every tile ≡ b mod
-        banks inside it, so each slot is a count of a residue class in a
-        range — O(devices * banks), never O(n_tiles) (model-scale operands
-        place hundreds of thousands of tiles per schedule step)."""
-        def upto(x: int, b: int) -> int:
-            # tiles t in [0, x) with t % banks == b  (0 <= b < banks)
-            return (x - b + self.banks - 1) // self.banks
+        min((d+1)*per_dev, n_tiles)) and live bank slot s takes every tile
+        ≡ s mod n_live inside it, so each slot is a count of a residue
+        class in a range — O(devices * banks), never O(n_tiles)
+        (model-scale operands place hundreds of thousands of tiles per
+        schedule step). Keys are PHYSICAL bank ids; disabled banks never
+        appear."""
+        live = self.live_banks
+        n_live = len(live)
+
+        def upto(x: int, s: int) -> int:
+            # tiles t in [0, x) with t % n_live == s  (0 <= s < n_live)
+            return (x - s + n_live - 1) // n_live
 
         per_dev = -(-self.n_tiles // n_devices)
         counts: Dict[Tuple[int, int], int] = {}
         for d in range(n_devices):
             lo = min(d * per_dev, self.n_tiles)
             hi = min(lo + per_dev, self.n_tiles)
-            for b in range(self.banks):
-                n = upto(hi, b) - upto(lo, b)
+            for s, b in enumerate(live):
+                n = upto(hi, s) - upto(lo, s)
                 if n:
                     counts[(d, b)] = n
         return counts
@@ -170,10 +224,15 @@ class ResidentEntry:
                    e.g. a paged KV block whose values live outside the
                    packed domain but whose rows are spoken for).
     rows_by_bank : rows this entry holds in each bank — n_bits plane rows
-                   per tile placed there (tiles on the same bank stack).
+                   per tile placed there (tiles on the same bank stack),
+                   plus the SECDED parity rows when the set runs with ECC.
     fingerprint  : identity of the source buffers; a mismatched `get()`
                    drops the entry (stale pin) instead of returning it.
     evictable    : LRU-evictable under pin pressure; reservations are not.
+    ecc_parity   : uint32[r+1, W] SECDED parity planes of the pinned pack
+                   (None when the set runs unprotected).
+    scrubbed_s   : fault-model clock of the last verify/scrub — what the
+                   retention-decay model integrates flips over.
     """
 
     key: Tuple
@@ -184,6 +243,8 @@ class ResidentEntry:
     evictable: bool = True
     aux: Any = None
     hits: int = 0
+    ecc_parity: Any = None
+    scrubbed_s: float = 0.0
 
 
 class ResidentSet:
@@ -199,13 +260,14 @@ class ResidentSet:
     """
 
     def __init__(self, spec: Optional[ArraySpec] = None,
-                 reserve_rows: int = 0):
+                 reserve_rows: int = 0, ecc: bool = False):
         self.spec = spec or DEFAULT_SPEC
         if reserve_rows < 0 or reserve_rows >= self.spec.rows:
             raise opset.CimOpError(
                 f"reserve_rows must be in [0, {self.spec.rows}), "
                 f"got {reserve_rows}")
         self.reserve_rows = reserve_rows
+        self.ecc = bool(ecc)
         self._entries: "OrderedDict[Tuple, ResidentEntry]" = OrderedDict()
         self.pins = 0
         self.reserves = 0
@@ -213,6 +275,9 @@ class ResidentSet:
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        self.ecc_corrected = 0
+        self.ecc_uncorrected = 0
+        self.ecc_verifies = 0
         _ALL_SETS.add(self)
 
     # -- occupancy ----------------------------------------------------------
@@ -264,6 +329,12 @@ class ResidentSet:
             self.misses += 1
             _STATS["resident_misses"] += 1
             return None
+        if entry.ecc_parity is not None and not self._verify(entry):
+            # uncorrectable: the rows are data loss; the entry was dropped
+            # (invalidation) so the caller rebuilds from the source
+            self.misses += 1
+            _STATS["resident_misses"] += 1
+            return None
         entry.hits += 1
         self.hits += 1
         _STATS["resident_hits"] += 1
@@ -273,23 +344,134 @@ class ResidentSet:
     def pin(self, key: Tuple, pack, fingerprint: Tuple = (),
             aux: Any = None) -> ResidentEntry:
         """Pack `pack` into resident rows (evicting LRU pins to fit) and
-        charge the one-time operand load the pin replaces per call."""
+        charge the one-time operand load the pin replaces per call. With
+        `ecc` on, the SECDED parity planes are encoded here, stored as
+        extra rows of the same banks, and their row writes charged as ECC
+        overhead (`Ledger.charge_ecc`)."""
         from .accounting import LEDGER
 
         if key in self._entries:
             del self._entries[key]        # re-pin: release the stale rows
-        rows = self._rows_for(pack.n_bits, pack.n_words)
+        parity = None
+        n_ecc = 0
+        if self.ecc:
+            from . import faults as faults_mod
+            from .planepack import ecc_encode, ecc_plane_count
+            import numpy as _np
+            parity = ecc_encode(_np.asarray(pack.planes))
+            n_ecc = ecc_plane_count(pack.n_bits)
+        rows = self._rows_for(pack.n_bits + n_ecc, pack.n_words)
         self._make_room(key, rows)
         words32 = pack.n_words * pack.n_bits / 32.0
+        fm = None
+        if self.ecc:
+            fm = faults_mod.active()
         entry = ResidentEntry(key=key, pack=pack, rows_by_bank=rows,
                               words32=words32, fingerprint=tuple(fingerprint),
-                              evictable=True, aux=aux)
+                              evictable=True, aux=aux, ecc_parity=parity,
+                              scrubbed_s=(fm.clock() if fm is not None
+                                          else 0.0))
         self._entries[key] = entry
         self.pins += 1
         _STATS["resident_pins"] += 1
-        LEDGER.charge_load(pack.n_bits, pack.n_words,
-                           n_tiles=self.spec.plan(pack.n_words).n_tiles)
+        n_tiles = self.spec.plan(pack.n_words).n_tiles
+        LEDGER.charge_load(pack.n_bits, pack.n_words, n_tiles=n_tiles)
+        if n_ecc:
+            LEDGER.charge_ecc(n_ecc, pack.n_words, n_tiles=n_tiles)
         return entry
+
+    # -- ECC verify / scrub --------------------------------------------------
+
+    def _verify(self, entry: ResidentEntry, decay_s: float = 0.0) -> bool:
+        """One ECC pass over a protected entry: inject whatever the active
+        fault model says the rows took (per-get resident BER, plus
+        `decay_s` seconds of retention decay on the scrub path), then
+        SECDED-verify and repair. Returns False — after invalidating the
+        entry — when the damage was uncorrectable."""
+        import dataclasses as _dc
+
+        import jax.numpy as _jnp
+        import numpy as _np
+
+        from . import faults as faults_mod
+        from .accounting import LEDGER
+        from .planepack import ecc_check_correct
+
+        fm = faults_mod.active()
+        planes = _np.asarray(entry.pack.planes)
+        parity = entry.ecc_parity
+        if fm is not None:
+            planes, _ = fm.corrupt_resident(planes)
+            if decay_s > 0.0:
+                flips = fm.decay_bits(
+                    decay_s, planes.size * 32 + parity.size * 32)
+                if flips:
+                    planes = _np.array(planes, copy=True)
+                    flat = planes.reshape(-1)
+                    idx = fm.rng.integers(0, planes.size * 32, size=flips)
+                    for i in _np.asarray(idx):
+                        flat[i // 32] ^= _np.uint32(1) << _np.uint32(i % 32)
+                    fm.injected += flips
+                    faults_mod._STATS["fault_injected"] += flips
+                    LEDGER.charge_fault(injected=int(flips))
+            entry.scrubbed_s = fm.clock()
+        fixed, fixed_par, corrected, uncorrected = \
+            ecc_check_correct(planes, parity)
+        self.ecc_verifies += 1
+        _STATS["ecc_verifies"] += 1
+        from .planepack import ecc_plane_count
+        LEDGER.charge_ecc(ecc_plane_count(entry.pack.n_bits),
+                          entry.pack.n_words,
+                          n_tiles=self.spec.plan(entry.pack.n_words).n_tiles)
+        if corrected:
+            self.ecc_corrected += corrected
+            _STATS["ecc_corrected"] += corrected
+        if uncorrected:
+            self.ecc_uncorrected += uncorrected
+            _STATS["ecc_uncorrected"] += uncorrected
+        if fm is not None:
+            fm.record_verify(corrected, uncorrected)
+        if uncorrected:
+            self._entries.pop(entry.key, None)
+            self.invalidations += 1
+            _STATS["resident_invalidations"] += 1
+            if fm is not None and fm.config.raise_on_uncorrectable:
+                raise faults_mod.UncorrectableFaultError(
+                    f"resident entry {entry.key!r}: {uncorrected} "
+                    f"uncorrectable bit(s); entry invalidated — re-pin "
+                    f"and retry")
+            return False
+        if corrected or fm is not None:
+            entry.pack = _dc.replace(entry.pack,
+                                     planes=_jnp.asarray(fixed))
+            entry.ecc_parity = fixed_par
+        return True
+
+    def scrub(self) -> Dict[str, int]:
+        """Walk every protected pin, integrate retention decay since its
+        last verify, and repair what SECDED can (uncorrectable entries are
+        invalidated so the next `get` misses and rebuilds). The periodic
+        background pass a serving process runs between steps."""
+        from . import faults as faults_mod
+
+        fm = faults_mod.active()
+        now = fm.clock() if fm is not None else 0.0
+        corrected0 = self.ecc_corrected
+        uncorrected0 = self.ecc_uncorrected
+        scanned = 0
+        dropped = 0
+        for entry in list(self._entries.values()):
+            if entry.ecc_parity is None:
+                continue
+            scanned += 1
+            decay_s = max(0.0, now - entry.scrubbed_s) if fm is not None \
+                else 0.0
+            if not self._verify(entry, decay_s=decay_s):
+                dropped += 1
+        _STATS["ecc_scrubs"] += 1
+        return {"scanned": scanned, "dropped": dropped,
+                "corrected": self.ecc_corrected - corrected0,
+                "uncorrected": self.ecc_uncorrected - uncorrected0}
 
     def reserve(self, key: Tuple, n_rows: int, bank: int = 0,
                 words32: float = 0.0,
@@ -343,6 +525,9 @@ class ResidentSet:
                 "hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
                 "invalidations": self.invalidations,
+                "ecc_verifies": self.ecc_verifies,
+                "ecc_corrected": self.ecc_corrected,
+                "ecc_uncorrected": self.ecc_uncorrected,
                 "resident_rows": self.resident_rows}
 
 
@@ -356,7 +541,9 @@ _STATS: Dict[str, int] = {}
 def _reset_stats() -> None:
     _STATS.update(resident_pins=0, resident_reserves=0, resident_hits=0,
                   resident_misses=0, resident_evictions=0,
-                  resident_invalidations=0)
+                  resident_invalidations=0,
+                  ecc_verifies=0, ecc_corrected=0, ecc_uncorrected=0,
+                  ecc_scrubs=0)
 
 
 _reset_stats()
@@ -365,25 +552,72 @@ _reset_stats()
 #: consults and the serving stack shares between weight pins and KV pages)
 _RESIDENT_SETS: Dict[ArraySpec, ResidentSet] = {}
 
+#: whether registry ResidentSets are created ECC-protected (serving turns
+#: this on before building its lowered state; default off keeps the
+#: committed ledger/bench baselines exact)
+_DEFAULT_ECC: bool = False
+
+#: process-wide spec override: the failover lever. Layers that default to
+#: spec=None resolve through `current_spec()`, so flipping this to a
+#: degraded ArraySpec re-routes every subsequent lowering/pin/dispatch
+#: through the degraded geometry — fresh spec-keyed caches and all.
+_CURRENT_SPEC: Optional[ArraySpec] = None
+
+
+def set_resident_ecc(on: bool) -> bool:
+    """Make future registry ResidentSets ECC-protected (or not); returns
+    the previous setting. Existing sets keep their mode — call
+    `clear_resident()` first to rebuild them protected."""
+    global _DEFAULT_ECC
+    prev = _DEFAULT_ECC
+    _DEFAULT_ECC = bool(on)
+    return prev
+
+
+def resident_ecc_default() -> bool:
+    return _DEFAULT_ECC
+
+
+def set_current_spec(spec: Optional[ArraySpec]) -> Optional[ArraySpec]:
+    """Install the process-wide spec override (None restores DEFAULT_SPEC
+    resolution); returns the previous override."""
+    global _CURRENT_SPEC
+    prev = _CURRENT_SPEC
+    _CURRENT_SPEC = spec
+    return prev
+
+
+def current_spec() -> ArraySpec:
+    """What `spec=None` means right now: the failover override if one is
+    installed, else the paper's DEFAULT_SPEC."""
+    return _CURRENT_SPEC if _CURRENT_SPEC is not None else DEFAULT_SPEC
+
+
+def spec_override() -> Optional[ArraySpec]:
+    """The raw failover override (None when the process is healthy).
+    Call sites whose `spec=None` historically meant UNBANKED lowering
+    (models.layers) consult this — they must not pick up DEFAULT_SPEC."""
+    return _CURRENT_SPEC
+
 
 def resident_set(spec: Optional[ArraySpec] = None) -> ResidentSet:
-    """The process-wide ResidentSet for `spec` (DEFAULT_SPEC when None).
+    """The process-wide ResidentSet for `spec` (`current_spec()` when None).
 
     Registry sets keep a quarter of the rows as reserve: headroom the
     combined `check_fits` budget guarantees streamed access planes — pins
     can never squeeze an access out of its own subarray."""
-    spec = spec or DEFAULT_SPEC
+    spec = spec or current_spec()
     rs = _RESIDENT_SETS.get(spec)
     if rs is None:
         rs = _RESIDENT_SETS[spec] = ResidentSet(
-            spec, reserve_rows=spec.rows // 4)
+            spec, reserve_rows=spec.rows // 4, ecc=_DEFAULT_ECC)
     return rs
 
 
 def resident_rows_for(spec: Optional[ArraySpec]) -> int:
     """Busiest-bank resident occupancy of the registry set for `spec` —
     what the dispatcher folds into the combined check_fits budget."""
-    rs = _RESIDENT_SETS.get(spec or DEFAULT_SPEC)
+    rs = _RESIDENT_SETS.get(spec or current_spec())
     return rs.resident_rows if rs is not None else 0
 
 

@@ -229,14 +229,27 @@ class EqnVerdict:
         return d
 
 
+def ecc_overhead(n_bits: int) -> float:
+    """Fractional row/load overhead of SECDED on an n_bits resident pack:
+    parity planes per data plane (5/8 at int8 — see planepack)."""
+    from .planepack import ecc_plane_count
+
+    return ecc_plane_count(n_bits) / max(1, n_bits)
+
+
 def project_eqn(op, index: int, spec: Optional[ArraySpec], res,
-                device: DeviceSpec, policy: str) -> EqnVerdict:
+                device: DeviceSpec, policy: str,
+                ecc_overhead_ratio: float = 0.0) -> EqnVerdict:
     """Project one eligible eqn's CiM / baseline / host costs and decide
-    whether it lowers under `policy`. `res` is an `energy.SchemeResult`."""
+    whether it lowers under `policy`. `res` is an `energy.SchemeResult`.
+    `ecc_overhead_ratio` (> 0 when resident operands run ECC-protected)
+    scales the streamed-load row writes: every protected load also writes
+    its parity planes, so the CiM side pays the protection the host side
+    never needs — the cost model weighs ECC against host fallback."""
     from .trace import aval_of, host_flops, host_io_bits
 
     words32 = eqn_words32(op)
-    load_w32 = eqn_load_words32(op)
+    load_w32 = eqn_load_words32(op) * (1.0 + max(0.0, ecc_overhead_ratio))
 
     if spec is not None and op.words >= 1 and op.accesses > 0:
         plan = spec.plan(op.words)
@@ -426,10 +439,15 @@ def plan_offload(tr, spec: Optional[ArraySpec] = None,
     device = device or DEFAULT_DEVICE
     res = accounting._SCHEMES[scheme](rows)
 
+    from . import array as array_mod
+
     verdicts: Dict[int, EqnVerdict] = {}
     for i, op in enumerate(tr.ops):
         if op.eligible:
-            verdicts[i] = project_eqn(op, i, spec, res, device, policy)
+            ratio = ecc_overhead(op.n_bits) \
+                if array_mod.resident_ecc_default() else 0.0
+            verdicts[i] = project_eqn(op, i, spec, res, device, policy,
+                                      ecc_overhead_ratio=ratio)
 
     demoted: set = set()
     if policy == "never":

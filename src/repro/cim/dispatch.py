@@ -167,6 +167,9 @@ def cache_stats() -> Dict[str, int]:
              "evictions": _EVICTIONS, "capacity": _CAPACITY,
              "dispatches": _DISPATCHES}
     stats.update(array_mod.resident_stats())
+    from . import faults as faults_mod
+
+    stats.update(faults_mod.fault_stats())
     return stats
 
 
@@ -316,6 +319,36 @@ def _prepare_tiles(a: PlanePack, b: PlanePack, ops: Sequence[str],
     return a, b, ops, plan, n_devices, ta, tb
 
 
+def _fault_overlay(a: PlanePack, b: PlanePack, plan: TilePlan,
+                   ta, tb, exec_tiles: int):
+    """Transient-fault injection on the STREAMED operands of one eager
+    tiled access (BER flips + stuck-at rows of the active FaultModel).
+    Faults are injected only on concrete values — inside a trace the
+    operands pass through untouched (a flip baked into a compiled program
+    would replay forever, which is not a fault model)."""
+    from . import faults as faults_mod
+
+    fm = faults_mod.active()
+    if fm is None or (fm.config.ber <= 0.0 and not fm.config.stuck):
+        return a, b, ta, tb
+    if isinstance(a.planes, jax.core.Tracer) \
+            or isinstance(b.planes, jax.core.Tracer):
+        return a, b, ta, tb
+    import dataclasses as _dc
+
+    import numpy as np
+
+    pa, na = fm.corrupt_streamed(np.asarray(a.planes), plan)
+    pb, nb = fm.corrupt_streamed(np.asarray(b.planes), plan)
+    if na:
+        a = _dc.replace(a, planes=jnp.asarray(pa))
+        ta = _tile(a.planes, plan, exec_tiles)
+    if nb:
+        b = _dc.replace(b, planes=jnp.asarray(pb))
+        tb = _tile(b.planes, plan, exec_tiles)
+    return a, b, ta, tb
+
+
 def _wrap_tiled(a: PlanePack, ops: Tuple[str, ...],
                 raws) -> engine.Outputs:
     w = a.planes.shape[1]
@@ -336,6 +369,8 @@ def execute_tiled(a: PlanePack, b: PlanePack, ops: Sequence[str],
     """
     a, b, ops, plan, n_devices, ta, tb = _prepare_tiles(
         a, b, ops, spec, mesh, axis)
+    a, b, ta, tb = _fault_overlay(a, b, plan, ta, tb,
+                                  exec_tiles=ta.shape[0])
     bk = get_backend(backend)
     prog = _cached_program(ops, a.n_bits, tuple(ta.shape[1:]), bk,
                            mesh, axis if mesh is not None else None)

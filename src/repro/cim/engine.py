@@ -81,11 +81,39 @@ def execute(a: PlanePack, b: PlanePack, ops: Sequence[str],
     first. Returns {op: PlanePack}; predicates come back as 1-plane unsigned
     packs (unpack() gives 0/1 per word).
     """
+    a, b = _fault_overlay(a, b)
     charges: list = []
     out = execute_traced(a, b, ops, backend=backend, charges=charges)
     for _, c_ops, n_bits, n_words in charges:
         LEDGER.charge(c_ops, n_bits, n_words, accesses=1)
     return out
+
+
+def _fault_overlay(a: PlanePack, b: PlanePack
+                   ) -> Tuple[PlanePack, PlanePack]:
+    """Transient BER injection on the streamed operands of one eager
+    access (the untiled path has no bank placement, so stuck-at rows do
+    not apply here). Concrete values only — tracers pass untouched."""
+    from . import faults as faults_mod
+
+    fm = faults_mod.active()
+    if fm is None or fm.config.ber <= 0.0:
+        return a, b
+    if isinstance(a.planes, jax.core.Tracer) \
+            or isinstance(b.planes, jax.core.Tracer):
+        return a, b
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    pa, na = fm.corrupt_streamed(np.asarray(a.planes))
+    pb, nb = fm.corrupt_streamed(np.asarray(b.planes))
+    if na:
+        a = _dc.replace(a, planes=jnp.asarray(pa))
+    if nb:
+        b = _dc.replace(b, planes=jnp.asarray(pb))
+    return a, b
 
 
 def execute_unfused(a: PlanePack, b: PlanePack,

@@ -1,0 +1,353 @@
+"""Seeded deterministic fault injection for the CiM substrate.
+
+FeFET arrays fail in characteristic ways: transient sensing upsets (a bit
+flips during one access), retention decay (pinned nonvolatile rows leak
+charge over seconds), stuck-at rows (a wordline driver welded to 0/1) and
+whole-bank failures (a shared driver or sense-amp block dies). This module
+models all four as an OVERLAY the rest of the stack opts into:
+
+  * `install(FaultModel)` arms a process-wide model; `active()` is what the
+    eager execution paths (`engine.execute`, `dispatch.execute_tiled`) and
+    the resident region (`ResidentSet.get` / `scrub`) consult. With nothing
+    installed every hook is a None-check — zero cost, zero behavior change.
+  * Transient faults are injected ONLY at eager Python call time, never
+    inside a traced program: a flip baked into a compiled XLA program would
+    replay identically on every invocation, which is not a fault model.
+    Resident-plane faults always qualify (pins are concrete by
+    construction), which is where ECC protection lives.
+  * Everything is deterministic: one `numpy` PCG64 generator seeded from
+    `FaultConfig.seed` (default: the `REPRO_CIM_FAULT_SEED` env var),
+    advanced monotonically per injection site. The same seed and the same
+    call sequence produce the same faults — chaos tests are replayable.
+
+Counters (injected / detected / corrected / uncorrected) are charged into
+the accounting Ledger (`charge_fault`) AND aggregated process-wide here, so
+`dispatch.cache_stats()` answers "did the run take faults and did ECC hold"
+next to its cache/residency counters.
+
+The same seed convention covers the training side: `host_failure_hook`
+builds the `fault_hook` callables `runtime.supervisor.Supervisor` restarts
+on (raising `SimulatedHostFailure`), so serving chaos tests and training
+chaos tests share one `REPRO_CIM_FAULT_SEED`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from . import opset
+from .accounting import LEDGER
+
+#: env vars of the shared fault-seed convention (serving + training chaos)
+ENV_SEED = "REPRO_CIM_FAULT_SEED"
+ENV_BER = "REPRO_CIM_FAULT_BER"
+ENV_RESIDENT_BER = "REPRO_CIM_FAULT_RESIDENT_BER"
+ENV_RETENTION = "REPRO_CIM_FAULT_RETENTION"
+
+
+class UncorrectableFaultError(opset.CimOpError):
+    """An ECC verify found more errors than SECDED can repair and the
+    installed FaultModel asked for fail-stop semantics. The stale entry has
+    already been invalidated; re-running the step re-pins from the source
+    (the serve engine's repair loop does exactly that)."""
+
+
+def fault_seed(default: int = 0) -> int:
+    """The process fault seed: REPRO_CIM_FAULT_SEED, else `default`."""
+    raw = os.environ.get(ENV_SEED)
+    if raw is None:
+        return default
+    try:
+        return int(raw)
+    except ValueError:
+        return default
+
+
+def _env_float(name: str, default: float = 0.0) -> float:
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    try:
+        return float(raw)
+    except ValueError:
+        return default
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Knobs of one deterministic fault campaign.
+
+    ber           : per-bit flip probability on each STREAMED operand of an
+                    eager access (engine.execute / dispatch.execute_tiled) —
+                    unprotected: silent data corruption, counted `injected`.
+    resident_ber  : per-bit flip probability applied to a pinned entry's
+                    plane stack on every resident `get` — the ECC-protected
+                    surface (verify runs right after injection).
+    retention_per_s : expected plane-bit flips per second pinned, applied by
+                    the periodic scrub pass (decay of nonvolatile rows).
+    stuck          : ((bank, plane, value), ...) stuck-at rows forced on
+                    streamed tiled accesses of the named bank.
+    kill_bank_at  : (decode_step, bank) — `on_step(step)` marks `bank` dead
+                    once `step` is reached (the serve chaos harness's
+                    mid-run bank kill).
+    raise_on_uncorrectable : fail-stop ECC semantics — `ResidentSet.get`
+                    raises UncorrectableFaultError instead of silently
+                    invalidate-and-miss (the serve repair loop installs
+                    this to count explicit repairs).
+    uncorrectable_at_verify : verify indices (0-based, process order) hit
+                    with a forced double-flip in one column — deterministic
+                    trigger for the invalidate/repair paths.
+    """
+
+    seed: int = 0
+    ber: float = 0.0
+    resident_ber: float = 0.0
+    retention_per_s: float = 0.0
+    stuck: Tuple[Tuple[int, int, int], ...] = ()
+    kill_bank_at: Optional[Tuple[int, int]] = None
+    raise_on_uncorrectable: bool = False
+    uncorrectable_at_verify: Tuple[int, ...] = ()
+
+    @classmethod
+    def from_env(cls, **overrides) -> "FaultConfig":
+        base = dict(seed=fault_seed(), ber=_env_float(ENV_BER),
+                    resident_ber=_env_float(ENV_RESIDENT_BER),
+                    retention_per_s=_env_float(ENV_RETENTION))
+        base.update(overrides)
+        return cls(**base)
+
+
+class FaultModel:
+    """One seeded fault campaign: deterministic injection + counters."""
+
+    def __init__(self, config: Optional[FaultConfig] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.config = config or FaultConfig()
+        self.clock = clock
+        self.rng = np.random.Generator(np.random.PCG64(self.config.seed))
+        self.dead_banks: Tuple[int, ...] = ()
+        self.injected = 0          # bits flipped into live data
+        self.detected = 0          # bits ECC saw (corrected + uncorrected)
+        self.corrected = 0
+        self.uncorrected = 0
+        self.verifies = 0          # ECC verify passes executed
+        self.bank_kills = 0
+
+    # -- bank lifecycle ------------------------------------------------------
+
+    def kill_bank(self, bank: int) -> None:
+        if bank not in self.dead_banks:
+            self.dead_banks = self.dead_banks + (int(bank),)
+            self.bank_kills += 1
+
+    def on_step(self, step: int) -> None:
+        """Advance scheduled faults to `step` (the serve loop's clock)."""
+        ka = self.config.kill_bank_at
+        if ka is not None and step >= ka[0]:
+            self.kill_bank(ka[1])
+
+    # -- plane corruption ----------------------------------------------------
+
+    def _flip_planes(self, planes: np.ndarray, ber: float) -> Tuple[
+            np.ndarray, int]:
+        """Flip ~Binomial(total_bits, ber) uniformly-placed bits."""
+        total_bits = planes.size * 32
+        n = int(self.rng.binomial(total_bits, ber)) if ber > 0 else 0
+        if n == 0:
+            return planes, 0
+        out = np.array(planes, dtype=np.uint32, copy=True)
+        idx = self.rng.integers(0, total_bits, size=n)
+        flat = out.reshape(-1)
+        for i in np.asarray(idx):
+            flat[i // 32] ^= np.uint32(1) << np.uint32(i % 32)
+        return out, n
+
+    def corrupt_streamed(self, planes, plan=None) -> Tuple[np.ndarray, int]:
+        """Transient faults on one streamed operand of an eager access:
+        BER flips plus stuck-at rows of the banks `plan` places tiles on.
+        Returns (possibly new) planes and the number of bits injected."""
+        arr = np.asarray(planes, dtype=np.uint32)
+        arr, n = self._flip_planes(arr, self.config.ber)
+        if self.config.stuck and plan is not None:
+            arr = np.array(arr, dtype=np.uint32, copy=True)
+            lanes = plan.lanes_per_tile
+            for bank, plane, value in self.config.stuck:
+                if plane >= arr.shape[0]:
+                    continue
+                for t in range(plan.n_tiles):
+                    if plan.bank_of(t) != bank:
+                        continue
+                    lo = t * lanes
+                    hi = min((t + 1) * lanes, arr.shape[1])
+                    if lo >= arr.shape[1]:
+                        break
+                    before = arr[plane, lo:hi].copy()
+                    arr[plane, lo:hi] = np.uint32(0xFFFFFFFF if value else 0)
+                    n += _bit_delta(before, arr[plane, lo:hi])
+        if n:
+            self.injected += n
+            _STATS["fault_injected"] += n
+            LEDGER.charge_fault(injected=n)
+        return arr, n
+
+    def corrupt_resident(self, planes) -> Tuple[np.ndarray, int]:
+        """Per-`get` decay on a pinned entry's planes (ECC territory)."""
+        arr = np.asarray(planes, dtype=np.uint32)
+        arr, n = self._flip_planes(arr, self.config.resident_ber)
+        if self.verifies in self.config.uncorrectable_at_verify \
+                and arr.shape[0] >= 2:
+            # forced double error in one column: same lane bit, two planes
+            arr = np.array(arr, dtype=np.uint32, copy=True)
+            arr[0, 0] ^= np.uint32(1)
+            arr[1, 0] ^= np.uint32(1)
+            n += 2
+        if n:
+            self.injected += n
+            _STATS["fault_injected"] += n
+            LEDGER.charge_fault(injected=n)
+        return arr, n
+
+    def decay_bits(self, seconds: float, total_bits: int) -> int:
+        """Retention-decay flips accumulated over `seconds` pinned."""
+        lam = self.config.retention_per_s * max(0.0, seconds)
+        if lam <= 0.0:
+            return 0
+        return min(int(self.rng.poisson(lam)), total_bits)
+
+    # -- ECC outcome accounting ---------------------------------------------
+
+    def record_verify(self, corrected: int, uncorrected: int) -> None:
+        self.verifies += 1
+        _STATS["fault_verifies"] += 1
+        if corrected:
+            self.corrected += corrected
+            self.detected += corrected
+            _STATS["fault_corrected"] += corrected
+            _STATS["fault_detected"] += corrected
+        if uncorrected:
+            self.uncorrected += uncorrected
+            self.detected += uncorrected
+            _STATS["fault_uncorrected"] += uncorrected
+            _STATS["fault_detected"] += uncorrected
+        LEDGER.charge_fault(detected=corrected + uncorrected,
+                            corrected=corrected, uncorrected=uncorrected)
+
+    def stats(self) -> Dict[str, int]:
+        return {"injected": self.injected, "detected": self.detected,
+                "corrected": self.corrected,
+                "uncorrected": self.uncorrected,
+                "verifies": self.verifies, "bank_kills": self.bank_kills,
+                "dead_banks": list(self.dead_banks)}
+
+
+def _bit_delta(before: np.ndarray, after: np.ndarray) -> int:
+    return int(np.unpackbits((before ^ after).view(np.uint8)).sum())
+
+
+# ---------------------------------------------------------------------------
+# the process-wide overlay
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional[FaultModel] = None
+
+#: process-wide counters surfaced through dispatch.cache_stats()
+_STATS: Dict[str, int] = {}
+
+
+def _reset_stats() -> None:
+    _STATS.update(fault_injected=0, fault_detected=0, fault_corrected=0,
+                  fault_uncorrected=0, fault_verifies=0)
+
+
+_reset_stats()
+
+
+def install(model: FaultModel) -> FaultModel:
+    """Arm `model` as the process fault overlay (replacing any other)."""
+    global _ACTIVE
+    _ACTIVE = model
+    return model
+
+
+def uninstall() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def active() -> Optional[FaultModel]:
+    return _ACTIVE
+
+
+def fault_stats() -> Dict[str, int]:
+    """Aggregated process-wide injection/ECC counters (cache_stats rides)."""
+    return dict(_STATS)
+
+
+def reset_fault_stats() -> None:
+    _reset_stats()
+
+
+class faults:
+    """Context manager: install a FaultModel for a with-block.
+
+        with faults(FaultConfig(seed=7, resident_ber=1e-3)) as fm:
+            ...
+    """
+
+    def __init__(self, config_or_model, clock=time.monotonic):
+        self.model = config_or_model if isinstance(config_or_model,
+                                                   FaultModel) \
+            else FaultModel(config_or_model, clock=clock)
+        self._prev: Optional[FaultModel] = None
+
+    def __enter__(self) -> FaultModel:
+        global _ACTIVE
+        self._prev = _ACTIVE
+        _ACTIVE = self.model
+        return self.model
+
+    def __exit__(self, *exc) -> None:
+        global _ACTIVE
+        _ACTIVE = self._prev
+        return None
+
+
+# ---------------------------------------------------------------------------
+# the training side of the shared seed convention
+# ---------------------------------------------------------------------------
+
+
+def host_failure_hook(fail_steps: Tuple[int, ...] = (),
+                      p_fail: float = 0.0,
+                      seed: Optional[int] = None
+                      ) -> Callable[[int], None]:
+    """A `Supervisor(fault_hook=...)` callable under the shared convention.
+
+    Raises SimulatedHostFailure at every step in `fail_steps`, plus with
+    probability `p_fail` per step — decided by a generator seeded from
+    (seed or REPRO_CIM_FAULT_SEED, step), so a given (seed, step) either
+    always fails or never does: restarts replay deterministically, which is
+    what makes the supervisor's restart-exact guarantee testable."""
+    from repro.runtime.supervisor import SimulatedHostFailure
+
+    base = fault_seed() if seed is None else int(seed)
+    fail = frozenset(int(s) for s in fail_steps)
+    fired = set()
+
+    def hook(step: int) -> None:
+        if step in fail and step not in fired:
+            fired.add(step)
+            raise SimulatedHostFailure(
+                f"injected host failure at step {step} (seed {base})")
+        if p_fail > 0.0 and step not in fired:
+            g = np.random.Generator(np.random.PCG64((base, int(step))))
+            if g.random() < p_fail:
+                fired.add(step)
+                raise SimulatedHostFailure(
+                    f"injected host failure at step {step} (seed {base})")
+
+    return hook

@@ -372,6 +372,13 @@ class LoweredComputation:
         self.spec = spec
         self.mesh = mesh
         self.resident_leaf_idx = tuple(resident_leaf_idx)
+        # resident_set=None -> the registry set for `spec`: resolved fresh
+        # on every execute (clear_resident/set_resident_ecc/failover swap
+        # the registry object; stale captures would pin unprotected), and
+        # once here for the construction-time residency budget planning
+        self._registry_rs = resident_set is None
+        if resident_set is None and self.resident_leaf_idx:
+            resident_set = array_mod.resident_set(spec)
         self.resident_set = resident_set
         # the cost model decides, per eligible eqn, whether lowering pays
         # under `policy` (repro.cim.cost); demoted eqns run on host
@@ -573,6 +580,11 @@ class LoweredComputation:
         # back to the plain streamed path (charged once per outer trace,
         # exactly as before)
         rs = self.resident_set
+        if self._registry_rs and self.resident_leaf_idx:
+            # registry-backed: re-resolve each call so ECC toggles,
+            # clear_resident() and failover spec swaps take effect on the
+            # next execution instead of pinning into a stale set
+            rs = array_mod.resident_set(self.spec)
         resident_on = (rs is not None and self.resident_leaf_idx
                        and any(r.resident for r in self.regions)
                        and not any(isinstance(leaves[i], jax.core.Tracer)
@@ -875,8 +887,11 @@ class LoweredFunction:
         self.resident_set = resident_set
         self.policy = cost_mod.normalize_policy(policy)
         self.device = device
-        if self.resident_argnums and self.resident_set is None:
-            self.resident_set = array_mod.resident_set(spec)
+        # resident_set=None means "the registry set for `spec`", resolved
+        # PER EXECUTION by LoweredComputation — never captured here: the
+        # registry set is replaced by clear_resident()/set_resident_ecc()/
+        # failover, and a captured reference would keep pinning into a
+        # stale (e.g. unprotected) set for the life of the layer cache
         self._cache: "OrderedDict[Any, LoweredComputation]" = OrderedDict()
 
     def _resident_leaf_idx(self, args) -> Tuple[int, ...]:

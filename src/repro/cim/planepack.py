@@ -175,6 +175,140 @@ class PlanePack:
         return dataclasses.replace(other, planes=jnp.zeros_like(other.planes))
 
 
+# ---------------------------------------------------------------------------
+# SECDED over plane columns: parity planes for the resident region
+# ---------------------------------------------------------------------------
+#
+# In the transposed layout one logical element occupies a COLUMN: bit j of
+# lane word w across the n_bits plane rows. A Hamming(SECDED) code across the
+# plane index therefore protects every element independently, and because the
+# planes are packed uint32 the whole codec is a handful of bitwise XORs over
+# plane rows — one parity plane per Hamming check bit plus one overall-parity
+# plane, stored as extra rows next to the data planes they protect.
+#
+# Guarantees per column (element): any single bit flip is corrected exactly,
+# any double flip is detected (never miscorrected); three or more flips may
+# alias a valid syndrome and miscorrect — the classic SECDED bound, asserted
+# by tests/test_cim_faults.py.
+#
+# These helpers are numpy-eager on purpose: ECC verify/correct runs at
+# Python call time on CONCRETE pinned planes (residency is disabled under
+# tracers), never inside a compiled program.
+
+import numpy as np
+
+
+def _hamming_data_positions(m: int) -> list:
+    """Hamming codeword positions of the m data planes: the first m
+    positive integers that are not powers of two (powers of two are the
+    check-bit positions)."""
+    pos, p = [], 3
+    while len(pos) < m:
+        if p & (p - 1):
+            pos.append(p)
+        p += 1
+    return pos
+
+
+def ecc_plane_count(n_bits: int) -> int:
+    """Parity planes protecting `n_bits` data planes: r Hamming check
+    planes (2^r >= n_bits + r + 1) plus the overall-parity plane that
+    upgrades single-error-correction to double-error-detection."""
+    if n_bits < 1:
+        raise ValueError(f"cannot protect {n_bits} planes")
+    r = 0
+    while (1 << r) < n_bits + r + 1:
+        r += 1
+    return r + 1
+
+
+def ecc_encode(planes) -> np.ndarray:
+    """uint32[m, W] data planes -> uint32[r+1, W] parity planes (r Hamming
+    check planes, then the overall parity plane)."""
+    data = np.asarray(planes, dtype=np.uint32)
+    m, w = data.shape
+    r = ecc_plane_count(m) - 1
+    pos = _hamming_data_positions(m)
+    parity = np.zeros((r + 1, w), np.uint32)
+    for k in range(r):
+        acc = np.zeros(w, np.uint32)
+        for i, p in enumerate(pos):
+            if (p >> k) & 1:
+                acc ^= data[i]
+        parity[k] = acc
+    parity[r] = (np.bitwise_xor.reduce(data, axis=0)
+                 ^ (np.bitwise_xor.reduce(parity[:r], axis=0)
+                    if r else np.uint32(0)))
+    return parity
+
+
+def _popcount(mask: np.ndarray) -> int:
+    return int(np.unpackbits(mask.view(np.uint8)).sum())
+
+
+def ecc_check_correct(planes, parity) -> Tuple[np.ndarray, np.ndarray,
+                                               int, int]:
+    """Verify (and repair) a protected plane stack.
+
+    Returns (data, parity, corrected, uncorrected): the corrected copies
+    plus per-bit counts — `corrected` single-bit errors repaired in place
+    (data, check or overall planes alike), `uncorrected` bits flagged as
+    detected-but-uncorrectable (even total parity with a nonzero syndrome:
+    a double error in one column). The caller must treat any nonzero
+    `uncorrected` as data loss — invalidate and rebuild from the source.
+    """
+    data = np.array(planes, dtype=np.uint32, copy=True)
+    par = np.array(parity, dtype=np.uint32, copy=True)
+    m, w = data.shape
+    r = par.shape[0] - 1
+    pos = _hamming_data_positions(m)
+
+    syn = np.zeros((r, w), np.uint32)
+    for k in range(r):
+        acc = par[k].copy()
+        for i, p in enumerate(pos):
+            if (p >> k) & 1:
+                acc ^= data[i]
+        syn[k] = acc
+    overall = np.bitwise_xor.reduce(data, axis=0)
+    for k in range(r + 1):
+        overall = overall ^ par[k]
+    any_syn = np.bitwise_or.reduce(syn, axis=0) if r \
+        else np.zeros(w, np.uint32)
+
+    def syndrome_is(p: int) -> np.ndarray:
+        acc = np.full(w, 0xFFFFFFFF, np.uint32)
+        for k in range(r):
+            acc &= syn[k] if (p >> k) & 1 else ~syn[k]
+        return acc
+
+    corrected = 0
+    fixed = np.zeros(w, np.uint32)
+    for i, p in enumerate(pos):               # single error in a data plane
+        fix = syndrome_is(p) & overall
+        if fix.any():
+            data[i] ^= fix
+            corrected += _popcount(fix)
+        fixed |= fix
+    for k in range(r):                        # single error in a check plane
+        fix = syndrome_is(1 << k) & overall
+        if fix.any():
+            par[k] ^= fix
+            corrected += _popcount(fix)
+        fixed |= fix
+    fix = syndrome_is(0) & overall            # error in the overall plane
+    if fix.any():
+        par[r] ^= fix
+        corrected += _popcount(fix)
+    fixed |= fix
+
+    # even parity + nonzero syndrome: double error (detected, not fixable);
+    # odd parity pointing outside every valid position: 3+ flips, ditto
+    uncorrectable = (any_syn & ~overall) | (overall & ~fixed)
+    uncorrected = _popcount(uncorrectable)
+    return data, par, corrected, uncorrected
+
+
 def mask_to_ints(bitmap: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
     """uint32[1, W] per-word predicate bitmap -> int32 0/1 tensor of shape."""
     n = 1

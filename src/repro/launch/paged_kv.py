@@ -77,7 +77,10 @@ class PagedKV:
     # -- block lifecycle -----------------------------------------------------
 
     def bank_of_block(self, bid: int) -> int:
-        return bid % self.spec.banks
+        """Round-robin over the LIVE banks only: a degraded spec skips its
+        dead banks, so new reservations never land on failed hardware."""
+        live = self.spec.enabled_banks
+        return live[bid % len(live)]
 
     def _claim(self, rid: int) -> bool:
         if not self._free:
@@ -134,6 +137,48 @@ class PagedKV:
             self._free.append(bid)
         self.lengths.pop(rid, None)
         self._free.sort()
+
+    # -- failover ------------------------------------------------------------
+
+    def migrate(self, new_spec: ArraySpec,
+                new_rs: Optional[ResidentSet] = None) -> int:
+        """Move every in-use block off the banks `new_spec` disables.
+
+        All-or-nothing: each block is re-reserved in `new_rs` (or the
+        current set) under the live-bank mapping of `new_spec` FIRST; only
+        when every block lands does the table release the old reservations
+        and adopt the new spec/set. A failed re-reserve rolls back every
+        reservation made so far and leaves the table untouched — the
+        caller falls back to shedding or host demotion. Returns the number
+        of blocks migrated."""
+        target = new_rs if new_rs is not None else self.rs
+        in_use = sorted(bid for blocks in self.tables.values()
+                        for bid in blocks)
+        live = new_spec.enabled_banks
+        placed: List[int] = []
+        if target is not None:
+            try:
+                for bid in in_use:
+                    target.reserve(("kv_mig", bid), self.kv_bits,
+                                   bank=live[bid % len(live)],
+                                   words32=(self.block_tokens
+                                            * self.kv_bits / 32.0))
+                    placed.append(bid)
+            except Exception:
+                for bid in placed:
+                    target.release(("kv_mig", bid))
+                raise
+            # commit: drop the old claims, rename the staged ones
+            for bid in in_use:
+                if self.rs is not None:
+                    self.rs.release(("kv", bid))
+            for bid in in_use:
+                entry = target._entries.pop(("kv_mig", bid))
+                entry.key = ("kv", bid)
+                target._entries[("kv", bid)] = entry
+        self.spec = new_spec
+        self.rs = target
+        return len(in_use)
 
     # -- reporting -----------------------------------------------------------
 

@@ -74,6 +74,8 @@ class ServeRequest:
     accesses: float = 0.0          # ledger attribution (see module docstring)
     load_accesses: float = 0.0
     token_latencies_ms: List[float] = dataclasses.field(default_factory=list)
+    shed: bool = False             # dropped by admission control, never ran
+    repairs: int = 0               # retried decode steps attributed here
 
     @property
     def done(self) -> bool:
@@ -87,6 +89,11 @@ class ServeRequest:
             "done_s": round(self.done_s, 6),
             "prefill_ms": round(self.prefill_ms, 3),
             "tokens": len(self.tokens),
+            # the generated ids themselves: what the chaos harness compares
+            # bit-exactly against a fault-free run
+            "token_ids": list(self.tokens),
+            "shed": self.shed,
+            "repairs": self.repairs,
             "accesses": round(self.accesses, 3),
             "load_accesses": round(self.load_accesses, 3),
             "total_accesses": round(self.accesses + self.load_accesses, 3),
@@ -117,7 +124,9 @@ class ServeEngine:
     def __init__(self, model, params, slots: int, max_len: int,
                  sampler: str = "greedy", cim_lower: bool = False,
                  paged: Optional[PagedKV] = None, warmup_steps: int = 1,
-                 seed: int = 0):
+                 seed: int = 0, spec=None, retry_budget: int = 2,
+                 queue_limit: Optional[int] = None,
+                 timeout_s: Optional[float] = None, scrub_every: int = 0):
         self.model, self.params, self.cfg = model, params, model.cfg
         self.slots, self.max_len = int(slots), int(max_len)
         self.sample = greedy_sample if sampler == "greedy" else adra_sample
@@ -125,6 +134,17 @@ class ServeEngine:
         self.paged = paged
         self.warmup_steps = int(warmup_steps)
         self.key = jax.random.PRNGKey(seed)
+        # -- self-healing / admission knobs ---------------------------------
+        self.spec = spec                      # CiM geometry this engine serves
+        self.retry_budget = int(retry_budget)  # decode retries per request
+        self.queue_limit = queue_limit        # waiting beyond this are shed
+        self.timeout_s = timeout_s            # max unadmitted wait before shed
+        self.scrub_every = int(scrub_every)   # decode steps between ECC scrubs
+        self.repairs = 0                      # uncorrectable -> re-pin+retry
+        self.failovers = 0                    # bank-kill remaps executed
+        self.shed_count = 0
+        self.scrub_report = {"scanned": 0, "dropped": 0,
+                             "corrected": 0, "uncorrected": 0}
         self.prefill_fn = jax.jit(make_prefill_step(model, max_len))
         dec = make_decode_step(model)
         # unjitted with --cim-lower: lowered regions then execute (and
@@ -132,6 +152,57 @@ class ServeEngine:
         self.decode_fn = dec if cim_lower else \
             jax.jit(dec, donate_argnums=(1,))
         self._insert = jax.jit(self._insert_slot)
+
+    # -- fault handling ------------------------------------------------------
+
+    def _check_faults(self, step: int) -> None:
+        """Advance the installed FaultModel to `step` and fail over when it
+        has killed a bank this engine still serves from."""
+        from repro.cim import faults as faults_mod
+
+        fm = faults_mod.active()
+        if fm is None:
+            return
+        fm.on_step(step)
+        if self.spec is None or not self.cim_lower:
+            return
+        dead = [b for b in fm.dead_banks
+                if b not in self.spec.disabled_banks
+                and b < self.spec.banks]
+        if dead:
+            self._failover(dead)
+
+    def _failover(self, dead_banks: List[int]) -> None:
+        """Remap the serving process off `dead_banks`: degraded spec, paged
+        KV migrated (all-or-nothing), stale weight pins dropped so they
+        re-pin under the new geometry, and the process-wide spec override
+        installed — every spec=None layer re-routes from the next call on.
+        Regions whose degraded-geometry cost no longer beats the host are
+        demoted by the offload policy when the fresh lowering re-plans."""
+        from repro.cim import array as array_mod
+
+        new_spec = self.spec
+        for b in dead_banks:
+            new_spec = new_spec.disable_bank(b)
+        new_rs = array_mod.resident_set(new_spec)
+        if self.paged is not None:
+            self.paged.migrate(new_spec, new_rs)
+        old_rs = array_mod._RESIDENT_SETS.get(self.spec)
+        if old_rs is not None and old_rs is not new_rs:
+            old_rs.clear()              # stale pins: re-pin under new_spec
+        array_mod.set_current_spec(new_spec)
+        self.spec = new_spec
+        self.failovers += 1
+
+    def _scrub(self) -> None:
+        from repro.cim import array as array_mod
+
+        rs = array_mod._RESIDENT_SETS.get(self.spec)
+        if rs is None or not rs.ecc:
+            return
+        r = rs.scrub()
+        for k in self.scrub_report:
+            self.scrub_report[k] += r.get(k, 0)
 
     @staticmethod
     def _insert_slot(batched, single, slot):
@@ -188,7 +259,32 @@ class ServeEngine:
         def now() -> float:
             return time.perf_counter() - t0
 
+        def _shed(req: ServeRequest) -> None:
+            req.shed = True
+            req.done_s = now()
+            self.shed_count += 1
+
         while pending or active:
+            self._check_faults(decode_steps)
+
+            # admission control: shed the head when it has waited past the
+            # per-request timeout, and the tail when more requests are due
+            # than the bounded queue admits — a degraded array sheds load
+            # instead of stretching every in-flight request's latency
+            if self.timeout_s is not None and not free:
+                # only a request actually stuck waiting can time out — a
+                # due head with a free slot is admitted this iteration
+                while pending and pending[0].arrival_s <= now() \
+                        and now() - pending[0].arrival_s > self.timeout_s:
+                    _shed(pending.popleft())
+            if self.queue_limit is not None:
+                # the bounded queue holds what cannot go straight into a
+                # slot: shed the tail past `free slots + queue_limit`
+                while sum(1 for r in pending
+                          if r.arrival_s <= now()) - len(free) \
+                        > self.queue_limit:
+                    _shed(pending.pop())
+
             # admit at most one due request per iteration: prefill
             # interleaves with decode instead of draining the batch
             if pending and free and pending[0].arrival_s <= now():
@@ -229,11 +325,28 @@ class ServeEngine:
                     time.sleep(max(0.0, pending[0].arrival_s - now()))
                 continue
 
-            # one full-batch decode step
+            # one full-batch decode step — retried within the per-request
+            # budget when an ECC verify finds uncorrectable damage (the
+            # failing entry is already invalidated, so the retry re-pins
+            # from the host weights: detect -> repair -> redo)
+            from repro.cim.faults import UncorrectableFaultError
+
             step_in = self._step_inputs(tok, positions, decode_steps)
             ts = time.perf_counter()
             l0 = (led.accesses, led.load_accesses)
-            caches, logits = self.decode_fn(self.params, caches, step_in)
+            attempts = 0
+            while True:
+                try:
+                    caches, logits = self.decode_fn(self.params, caches,
+                                                    step_in)
+                    break
+                except UncorrectableFaultError:
+                    attempts += 1
+                    self.repairs += 1
+                    for req in active.values():
+                        req.repairs += 1
+                    if attempts > self.retry_budget:
+                        raise
             jax.block_until_ready((caches, logits))
             dt = time.perf_counter() - ts
             d_acc = led.accesses - l0[0]
@@ -257,9 +370,13 @@ class ServeEngine:
                     self.paged.extend(req.rid)
                 if req.done:
                     self._retire(req, free, active, now())
+            if self.scrub_every and decode_steps % self.scrub_every == 0:
+                self._scrub()
 
         total_tokens = sum(len(r.tokens) for r in requests)
-        decode_tokens = total_tokens - len(requests)    # first token: prefill
+        # first token of each SERVED request comes from its prefill (shed
+        # requests produced nothing, so an all-shed run reports 0, not -n)
+        decode_tokens = sum(max(0, len(r.tokens) - 1) for r in requests)
         report: Dict[str, Any] = {
             "slots": self.slots,
             "requests": len(requests),
@@ -276,8 +393,27 @@ class ServeEngine:
             "prefill_ms_mean": round(
                 sum(r.prefill_ms for r in requests) / max(1, len(requests)),
                 3),
+            "shed": self.shed_count,
+            "completed": sum(1 for r in requests
+                             if not r.shed and r.done),
             "per_request": [r.report() for r in requests],
         }
+        from repro.cim import faults as faults_mod
+
+        fm = faults_mod.active()
+        if fm is not None or self.repairs or self.failovers:
+            fstats = fm.stats() if fm is not None else {}
+            report["faults"] = {
+                **fstats,
+                "repairs": self.repairs,
+                "failovers": self.failovers,
+                "shed": self.shed_count,
+                "scrub": dict(self.scrub_report),
+            }
+            from repro.cim.array import resident_stats
+            rst = resident_stats()
+            for k in ("ecc_verifies", "ecc_corrected", "ecc_uncorrected"):
+                report["faults"][k] = rst.get(k, 0)
         if self.paged is not None:
             st = self.paged.stats()
             report["kv"] = {
@@ -332,11 +468,14 @@ def _requests(args) -> List[ServeRequest]:
 def _fresh_cim_state() -> None:
     from repro.cim import clear_schedule_cache
     from repro.cim import cost as _cost
-    from repro.cim.array import clear_resident
+    from repro.cim import faults as faults_mod
+    from repro.cim.array import clear_resident, set_current_spec
     _ledger().reset()
     clear_resident()
     clear_schedule_cache()
     _cost.reset_plan_stats()
+    set_current_spec(None)
+    faults_mod.reset_fault_stats()
 
 
 def _serve_once(model, params, args) -> Dict[str, Any]:
@@ -353,7 +492,9 @@ def _serve_once(model, params, args) -> Dict[str, Any]:
     engine = ServeEngine(model, params, slots=args.slots,
                          max_len=args.prompt_len + args.gen,
                          sampler=args.sampler, cim_lower=args.cim_lower,
-                         paged=paged, warmup_steps=args.warmup_steps)
+                         paged=paged, warmup_steps=args.warmup_steps,
+                         spec=spec,
+                         scrub_every=getattr(args, "scrub_every", 0))
     return engine.run(_requests(args))
 
 
@@ -417,6 +558,13 @@ def main():
     ap.add_argument("--assert-warm", action="store_true",
                     help="replay the resident phase and fail unless every "
                          "program and pin stayed warm")
+    ap.add_argument("--cim-faults", action="store_true",
+                    help="with --cim-lower: run an extra chaos phase under "
+                         "the REPRO_CIM_FAULT_SEED/BER env fault campaign "
+                         "with ECC-protected resident operands, asserting "
+                         "bit-identical tokens to the fault-free phase")
+    ap.add_argument("--scrub-every", type=int, default=0,
+                    help="decode steps between ECC scrub passes (0: off)")
     args = ap.parse_args()
     if args.requests <= 0:
         args.requests = args.slots
@@ -505,6 +653,41 @@ def main():
               f"{repack['tok_s_steady']:.1f} tok/s (x{ratio:.2f}), "
               f"total accesses/token {resident['total_accesses_per_token']} "
               f"vs {repack['total_accesses_per_token']}")
+
+        if args.cim_faults:
+            # chaos phase: the resident run again, under the env-configured
+            # fault campaign with ECC-protected pins. Stored under
+            # phases.chaos (NOT promoted to the gated top-level keys: its
+            # tok/s includes verify overhead by design).
+            from repro.cim import array as array_mod
+            from repro.cim import faults as faults_mod
+            _fresh_cim_state()
+            array_mod.set_resident_ecc(True)
+            fcfg = faults_mod.FaultConfig.from_env(
+                raise_on_uncorrectable=True)
+            try:
+                with faults_mod.faults(fcfg) as fm:
+                    chaos = _serve_once(model_resident, params, args)
+            finally:
+                array_mod.set_resident_ecc(False)
+                array_mod.set_current_spec(None)
+            out["phases"]["chaos"] = chaos
+            fr = chaos.get("faults", {})
+            tokens_match = (
+                [r["token_ids"] for r in chaos["per_request"]]
+                == [r["token_ids"] for r in resident["per_request"]])
+            assert tokens_match, \
+                "chaos phase tokens diverged from the fault-free run"
+            assert fr.get("uncorrected", 0) == 0, \
+                f"chaos phase left {fr.get('uncorrected')} uncorrected bits"
+            if fcfg.resident_ber > 0:
+                assert fr.get("corrected", 0) > 0, \
+                    "resident BER configured but ECC corrected nothing"
+            print(f"chaos phase (seed {fcfg.seed}, resident BER "
+                  f"{fcfg.resident_ber:g}): bit-identical tokens, "
+                  f"{fr.get('injected', 0)} bits injected / "
+                  f"{fr.get('corrected', 0)} corrected / 0 uncorrected, "
+                  f"{chaos['tok_s_steady']:.1f} tok/s under verify")
 
     if args.json:
         with open(args.json, "w") as f:

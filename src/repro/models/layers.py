@@ -222,30 +222,27 @@ def _lru_get(cache, key, make):
 
 
 def _lowered_linear(n_bits: int, backend, spec, mesh, resident: bool = False):
-    from repro.cim import array
     from repro.cim.lower import lower
 
+    # resident_set stays None: the lowered callable resolves the registry
+    # set per execution, so clear_resident()/set_resident_ecc()/failover
+    # are honored even though this LRU outlives them
     return _lru_get(
         _LOWERED_LINEAR, (n_bits, backend, spec, mesh, resident),
         lambda: lower(lambda x, w: _quantized_linear(x, w, n_bits),
                       backend=backend, spec=spec, mesh=mesh,
-                      resident_argnums=(1,) if resident else (),
-                      resident_set=array.resident_set(spec)
-                      if resident else None))
+                      resident_argnums=(1,) if resident else ()))
 
 
 def _lowered_mlp(gating: str, n_bits: int, backend, spec, mesh,
                  resident: bool = False):
-    from repro.cim import array
     from repro.cim.lower import lower
 
     return _lru_get(
         _LOWERED_MLP, (gating, n_bits, backend, spec, mesh, resident),
         lambda: lower(lambda p, x: _mlp_quantized(p, x, gating, n_bits),
                       backend=backend, spec=spec, mesh=mesh,
-                      resident_argnums=(0,) if resident else (),
-                      resident_set=array.resident_set(spec)
-                      if resident else None))
+                      resident_argnums=(0,) if resident else ()))
 
 
 def cim_linear(x: jax.Array, w: jax.Array, n_bits: int = 8,
@@ -267,7 +264,15 @@ def cim_linear(x: jax.Array, w: jax.Array, n_bits: int = 8,
     region at first call: warm calls skip the weight-side entry pack (and
     its quantization eqns) entirely — the paper's stored-operand execution.
     Pass the SAME `w` array object each call to stay warm.
+
+    `spec=None` resolves through `array.spec_override()` — the failover
+    lever: installing a degraded spec re-routes every subsequent call
+    through the degraded geometry (fresh lowered callables, fresh pins);
+    with no override installed, None keeps meaning unbanked lowering.
     """
+    if spec is None:
+        from repro.cim import array
+        spec = array.spec_override()
     return _lowered_linear(n_bits, backend, spec, mesh, resident)(x, w)
 
 
@@ -278,7 +283,11 @@ def mlp_cim(p: Params, x: jax.Array, gating: str, n_bits: int = 8,
     matmul executes in the CiM array, every float op (quantization scales,
     SiLU/GELU gating) on the host — the opt-in twin of `mlp` for offload
     studies on reduced configs. `resident=True` pins the int8 weight planes
-    across calls (see cim_linear)."""
+    across calls (see cim_linear). `spec=None` resolves through
+    `array.spec_override()` — bank failover re-routes here too."""
+    if spec is None:
+        from repro.cim import array
+        spec = array.spec_override()
     return _lowered_mlp(gating, n_bits, backend, spec, mesh, resident)(p, x)
 
 

@@ -10,6 +10,11 @@ Responsibilities (all covered by tests/test_runtime.py):
   * straggler detection: per-step wall-time EWMA; hosts slower than
     `straggler_factor` x the median are flagged (on real fleets this feeds
     the re-slicing controller; here it is surfaced in metrics)
+
+Fault seeding convention: chaos tests build their `fault_hook` callables
+via `repro.cim.faults.host_failure_hook`, which seeds from the same
+REPRO_CIM_FAULT_SEED env var as the serving-side FaultModel — one seed
+drives both training and serving fault campaigns deterministically.
 """
 from __future__ import annotations
 

@@ -1,0 +1,503 @@
+"""Fault layer tests: deterministic injection, SECDED ECC on resident
+operands, bank failover remapping, and the shared fault-seed convention.
+
+The chaos tests of the serve engine itself (mid-run bank kill, shedding)
+live in tests/test_serve_engine.py; this file covers the substrate:
+faults.py, the planepack SECDED codec, ResidentSet verify/scrub, TilePlan
+dead-bank remapping, PagedKV migration, and ledger ECC accounting.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.cim import dispatch, engine, faults
+from repro.cim.accounting import LEDGER
+from repro.cim.array import ArraySpec, ResidentSet, resident_set
+from repro.cim.opset import CimOpError
+from repro.cim.planepack import (PlanePack, ecc_check_correct, ecc_encode,
+                                 ecc_plane_count)
+
+SPEC = ArraySpec(banks=2, subarrays=1, rows=64, bitline_words=32)
+ECC_SPEC = ArraySpec(banks=4, subarrays=1, rows=256, bitline_words=32)
+
+
+@pytest.fixture(autouse=True)
+def _clean_overlay():
+    faults.uninstall()
+    faults.reset_fault_stats()
+    yield
+    faults.uninstall()
+    faults.reset_fault_stats()
+
+
+def _packs(n=128, bits=8):
+    x = np.arange(n, dtype=np.int32) % 100
+    y = np.ones(n, dtype=np.int32)
+    return (x, y, PlanePack.pack(jnp.asarray(x), bits),
+            PlanePack.pack(jnp.asarray(y), bits))
+
+
+# ---------------------------------------------------------------------------
+# SECDED codec
+# ---------------------------------------------------------------------------
+
+
+class TestSecded:
+    def test_plane_counts(self):
+        # classic Hamming r for m data bits, plus the overall parity plane
+        assert ecc_plane_count(1) == 3
+        assert ecc_plane_count(4) == 4
+        assert ecc_plane_count(8) == 5
+        assert ecc_plane_count(16) == 6
+
+    def test_clean_roundtrip(self):
+        pl = np.random.default_rng(0).integers(
+            0, 2**32, size=(8, 6), dtype=np.uint32)
+        par = ecc_encode(pl)
+        assert par.shape == (5, 6)
+        data, p2, corrected, uncorrected = ecc_check_correct(pl, par)
+        assert corrected == 0 and uncorrected == 0
+        assert (data == pl).all() and (p2 == par).all()
+
+    def test_corrects_every_single_data_bit(self):
+        pl = np.random.default_rng(1).integers(
+            0, 2**32, size=(8, 2), dtype=np.uint32)
+        par = ecc_encode(pl)
+        for plane in range(8):
+            for bit in (0, 13, 31, 45):
+                bad = pl.copy()
+                bad[plane, bit // 32] ^= np.uint32(1) << np.uint32(bit % 32)
+                data, _, c, u = ecc_check_correct(bad, par)
+                assert c == 1 and u == 0
+                assert (data == pl).all()
+
+    def test_corrects_single_parity_bit(self):
+        pl = np.random.default_rng(2).integers(
+            0, 2**32, size=(8, 2), dtype=np.uint32)
+        par = ecc_encode(pl)
+        for pplane in range(par.shape[0]):
+            bad = par.copy()
+            bad[pplane, 0] ^= np.uint32(1)
+            data, fixed_par, c, u = ecc_check_correct(pl, bad)
+            assert c == 1 and u == 0
+            assert (data == pl).all() and (fixed_par == par).all()
+
+    def test_detects_double_never_miscorrects(self):
+        # SECDED's guarantee: two errors in one element's column are
+        # DETECTED (flagged uncorrectable), never silently miscorrected
+        pl = np.random.default_rng(3).integers(
+            0, 2**32, size=(8, 2), dtype=np.uint32)
+        par = ecc_encode(pl)
+        for p1, p2 in [(0, 1), (2, 7), (0, 7), (3, 4)]:
+            bad = pl.copy()
+            bad[p1, 0] ^= np.uint32(1)
+            bad[p2, 0] ^= np.uint32(1)
+            _, _, c, u = ecc_check_correct(bad, par)
+            assert u == 1 and c == 0
+
+    def test_independent_columns(self):
+        # one single-bit error in each of two different elements: both
+        # corrected (the code protects each column independently)
+        pl = np.random.default_rng(4).integers(
+            0, 2**32, size=(8, 2), dtype=np.uint32)
+        par = ecc_encode(pl)
+        bad = pl.copy()
+        bad[1, 0] ^= np.uint32(1 << 5)
+        bad[6, 1] ^= np.uint32(1 << 20)
+        data, _, c, u = ecc_check_correct(bad, par)
+        assert c == 2 and u == 0 and (data == pl).all()
+
+
+# ---------------------------------------------------------------------------
+# deterministic injection
+# ---------------------------------------------------------------------------
+
+
+class TestInjection:
+    def test_same_seed_same_faults(self):
+        x, y, pa, pb = _packs()
+        with faults.faults(faults.FaultConfig(seed=1, ber=2e-3)) as fm1:
+            d1 = dispatch.execute_tiled(pa, pb, ("add",),
+                                        spec=SPEC)["add"].unpack()
+        with faults.faults(faults.FaultConfig(seed=1, ber=2e-3)) as fm2:
+            d2 = dispatch.execute_tiled(pa, pb, ("add",),
+                                        spec=SPEC)["add"].unpack()
+        assert fm1.injected == fm2.injected > 0
+        assert (np.asarray(d1) == np.asarray(d2)).all()
+
+    def test_different_seed_different_faults(self):
+        x, y, pa, pb = _packs()
+        outs = []
+        for seed in (1, 2):
+            with faults.faults(faults.FaultConfig(seed=seed, ber=2e-3)):
+                outs.append(np.asarray(dispatch.execute_tiled(
+                    pa, pb, ("add",), spec=SPEC)["add"].unpack()))
+        assert not (outs[0] == outs[1]).all()
+
+    def test_no_model_no_change(self):
+        x, y, pa, pb = _packs()
+        out = dispatch.execute_tiled(pa, pb, ("add",), spec=SPEC)
+        assert (np.asarray(out["add"].unpack()) == x + y).all()
+        assert faults.fault_stats()["fault_injected"] == 0
+
+    def test_engine_path_injects(self):
+        x, y, pa, pb = _packs()
+        with faults.faults(faults.FaultConfig(seed=2, ber=5e-3)) as fm:
+            engine.execute(pa, pb, ("add",))
+        assert fm.injected > 0
+        assert dispatch.cache_stats()["fault_injected"] == fm.injected
+
+    def test_stuck_rows_hit_only_their_bank(self):
+        x, y, pa, pb = _packs()
+        clean = np.asarray(dispatch.execute_tiled(
+            pa, pb, ("add",), spec=SPEC)["add"].unpack())
+        with faults.faults(faults.FaultConfig(seed=0, stuck=((1, 0, 1),))):
+            st = np.asarray(dispatch.execute_tiled(
+                pa, pb, ("add",), spec=SPEC)["add"].unpack())
+        diff = st != clean
+        # bank 1 owns tiles 1 and 3 of the 4-tile placement: words 32..63
+        # and 96..127; bank 0's words must be untouched
+        assert not diff[:32].any() and not diff[64:96].any()
+        assert diff[32:64].any() or diff[96:128].any()
+
+    def test_config_from_env(self, monkeypatch):
+        monkeypatch.setenv(faults.ENV_SEED, "42")
+        monkeypatch.setenv(faults.ENV_RESIDENT_BER, "1e-4")
+        cfg = faults.FaultConfig.from_env()
+        assert cfg.seed == 42 and cfg.resident_ber == 1e-4
+        assert faults.fault_seed() == 42
+        monkeypatch.setenv(faults.ENV_SEED, "not-an-int")
+        assert faults.fault_seed(default=7) == 7
+
+    def test_kill_bank_schedule(self):
+        fm = faults.FaultModel(faults.FaultConfig(kill_bank_at=(3, 1)))
+        fm.on_step(0)
+        fm.on_step(2)
+        assert fm.dead_banks == ()
+        fm.on_step(3)
+        assert fm.dead_banks == (1,) and fm.bank_kills == 1
+        fm.on_step(4)                              # idempotent
+        assert fm.bank_kills == 1
+
+
+# ---------------------------------------------------------------------------
+# ECC-protected resident operands
+# ---------------------------------------------------------------------------
+
+
+def _ecc_set():
+    return ResidentSet(ECC_SPEC, reserve_rows=64, ecc=True)
+
+
+class TestResidentEcc:
+    def test_pin_stores_parity_and_charges_ecc(self):
+        rs = _ecc_set()
+        _, _, pack, _ = _packs()
+        LEDGER.reset()
+        e = rs.pin(("w",), pack, fingerprint=(1,))
+        assert e.ecc_parity is not None
+        assert e.ecc_parity.shape[0] == ecc_plane_count(pack.n_bits)
+        # 13 rows/bank = 8 data + 5 parity planes per tile
+        assert all(r == 13 for r in e.rows_by_bank.values())
+        n_tiles = ECC_SPEC.plan(pack.n_words).n_tiles
+        assert LEDGER.ecc_accesses == n_tiles
+        assert LEDGER.ecc_words32 == pytest.approx(
+            pack.n_words * ecc_plane_count(pack.n_bits) / 32.0)
+        # the comparable load charge is UNCHANGED by protection
+        assert LEDGER.load_accesses == n_tiles
+
+    def test_get_corrects_single_bit_faults(self):
+        rs = _ecc_set()
+        x, _, pack, _ = _packs()
+        rs.pin(("w",), pack, fingerprint=(1,))
+        with faults.faults(faults.FaultConfig(seed=3,
+                                              resident_ber=2e-4)) as fm:
+            for _ in range(20):
+                got = rs.get(("w",), fingerprint=(1,))
+                assert got is not None
+                assert (np.asarray(got.pack.unpack()) == x).all()
+        assert fm.injected > 0
+        assert rs.ecc_corrected == fm.injected
+        assert rs.ecc_uncorrected == 0
+
+    def test_uncorrectable_invalidates_and_misses(self):
+        rs = _ecc_set()
+        _, _, pack, _ = _packs()
+        rs.pin(("w",), pack, fingerprint=(1,))
+        cfg = faults.FaultConfig(seed=0, uncorrectable_at_verify=(0,))
+        with faults.faults(cfg) as fm:
+            assert rs.get(("w",), fingerprint=(1,)) is None
+        assert fm.uncorrected == 1
+        assert rs.invalidations == 1
+        assert rs.get(("w",), fingerprint=(1,)) is None     # really gone
+
+    def test_uncorrectable_raises_when_failstop(self):
+        rs = _ecc_set()
+        _, _, pack, _ = _packs()
+        rs.pin(("w",), pack, fingerprint=(1,))
+        cfg = faults.FaultConfig(seed=0, uncorrectable_at_verify=(0,),
+                                 raise_on_uncorrectable=True)
+        with faults.faults(cfg):
+            with pytest.raises(faults.UncorrectableFaultError):
+                rs.get(("w",), fingerprint=(1,))
+        # the entry was invalidated before raising: a re-pin recovers
+        e = rs.pin(("w",), pack, fingerprint=(1,))
+        assert rs.get(("w",), fingerprint=(1,)) is e
+
+    def test_scrub_integrates_retention_decay(self):
+        rs = _ecc_set()
+        x, _, pack, _ = _packs()
+        clk = [0.0]
+        fm = faults.FaultModel(
+            faults.FaultConfig(seed=5, retention_per_s=2.0),
+            clock=lambda: clk[0])
+        with faults.faults(fm):
+            e = rs.pin(("w",), pack, fingerprint=(1,))
+            assert e.scrubbed_s == 0.0
+            clk[0] = 2.0
+            r = rs.scrub()
+            assert r["scanned"] == 1
+            assert e.scrubbed_s == 2.0      # decay window reset
+            got = rs.get(("w",), fingerprint=(1,))
+            if got is not None:             # survived (or repaired)
+                assert (np.asarray(got.pack.unpack()) == x).all()
+
+    def test_unprotected_set_never_verifies(self):
+        rs = ResidentSet(ECC_SPEC, reserve_rows=64, ecc=False)
+        _, _, pack, _ = _packs()
+        e = rs.pin(("w",), pack)
+        assert e.ecc_parity is None
+        with faults.faults(faults.FaultConfig(seed=1, resident_ber=1e-3)):
+            rs.get(("w",))
+        assert rs.ecc_verifies == 0
+
+    def test_registry_default_ecc_toggle(self):
+        from repro.cim.array import (clear_resident, resident_ecc_default,
+                                     set_resident_ecc)
+        clear_resident()
+        assert set_resident_ecc(True) is False
+        try:
+            assert resident_ecc_default()
+            assert resident_set(ECC_SPEC).ecc
+        finally:
+            set_resident_ecc(False)
+            clear_resident()
+
+    def test_ledger_fault_counters_and_reset(self):
+        LEDGER.reset()
+        rs = _ecc_set()
+        _, _, pack, _ = _packs()
+        rs.pin(("w",), pack, fingerprint=(1,))
+        with faults.faults(faults.FaultConfig(
+                seed=0, uncorrectable_at_verify=(0,))):
+            rs.get(("w",), fingerprint=(1,))
+        assert LEDGER.fault_injected >= 2
+        assert LEDGER.fault_detected >= 1
+        assert LEDGER.fault_uncorrected == 1
+        assert LEDGER.ecc_accesses > 0
+        LEDGER.reset()
+        assert LEDGER.fault_injected == 0 and LEDGER.ecc_accesses == 0
+        assert LEDGER.fault_uncorrected == 0 and LEDGER.ecc_words32 == 0
+
+
+# ---------------------------------------------------------------------------
+# resident invalidation counter (fingerprint mismatch)
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_mismatch_counts_invalidation():
+    rs = ResidentSet(SPEC)
+    _, _, pack, _ = _packs(n=32)
+    rs.pin(("w",), pack, fingerprint=(1,))
+    assert rs.get(("w",), fingerprint=(2,)) is None
+    st = rs.stats()
+    assert st["invalidations"] == 1 and st["misses"] == 1
+    from repro.cim.array import resident_stats
+    assert resident_stats()["resident_invalidations"] >= 1
+    # the counter also surfaces through the one-stop cache_stats()
+    assert "resident_invalidations" in dispatch.cache_stats()
+
+
+# ---------------------------------------------------------------------------
+# bank failover: dead-bank remapping
+# ---------------------------------------------------------------------------
+
+
+class TestFailover:
+    def test_disable_bank_validation(self):
+        spec = ArraySpec(banks=2, subarrays=1, rows=64, bitline_words=32)
+        deg = spec.disable_bank(0)
+        assert deg.enabled_banks == (1,) and deg.n_enabled == 1
+        with pytest.raises(CimOpError):
+            deg.disable_bank(1)                 # nothing left to remap to
+        with pytest.raises(CimOpError):
+            ArraySpec(banks=2, subarrays=1, rows=64, bitline_words=32,
+                      disabled_banks=(5,))
+
+    def test_degraded_plan_skips_dead_banks(self):
+        deg = ArraySpec(banks=4, subarrays=1, rows=64, bitline_words=32,
+                        disabled_banks=(1, 2))
+        plan = deg.plan(4 * 32)
+        assert plan.live_banks == (0, 3)
+        assert all(plan.bank_of(t) in (0, 3) for t in range(plan.n_tiles))
+        assert plan.waves == 2                  # 4 tiles over 2 live banks
+        counts = plan.bank_counts(1)
+        assert set(b for (_d, b) in counts) == {0, 3}
+
+    def test_remap_is_bit_exact(self):
+        x, y, pa, pb = _packs()
+        healthy = np.asarray(dispatch.execute_tiled(
+            pa, pb, ("add", "lt"), spec=SPEC)["add"].unpack())
+        deg = SPEC.disable_bank(0)
+        remapped = np.asarray(dispatch.execute_tiled(
+            pa, pb, ("add", "lt"), spec=deg)["add"].unpack())
+        assert (healthy == remapped).all()
+        assert (healthy == x + y).all()
+
+    def test_degraded_spec_is_distinct_cache_key(self):
+        deg = SPEC.disable_bank(1)
+        assert deg != SPEC and hash(deg) != hash(SPEC) or deg != SPEC
+        assert resident_set(SPEC) is not resident_set(deg)
+
+    def test_spec_override_routes_layers(self):
+        from repro.cim.array import (current_spec, set_current_spec,
+                                     spec_override, DEFAULT_SPEC)
+        assert spec_override() is None
+        assert current_spec() == DEFAULT_SPEC
+        deg = SPEC.disable_bank(0)
+        try:
+            assert set_current_spec(deg) is None
+            assert spec_override() == deg and current_spec() == deg
+        finally:
+            set_current_spec(None)
+        assert spec_override() is None
+
+    def test_paged_kv_migrates_off_dead_bank(self):
+        from repro.launch.paged_kv import PagedKV
+        rs = ResidentSet(SPEC)
+        kv = PagedKV(spec=SPEC, n_blocks=4, block_tokens=4, kv_bits=8,
+                     resident_set=rs)
+        assert kv.alloc(0, 16)                  # all 4 blocks, banks 0+1
+        assert set(rs.rows_per_bank()) == {0, 1}
+        deg = SPEC.disable_bank(0)
+        rs2 = ResidentSet(deg)
+        moved = kv.migrate(deg, rs2)
+        assert moved == 4
+        assert set(rs2.rows_per_bank()) == {1}  # everything off bank 0
+        assert len(rs) == 0                     # old claims released
+        assert kv.spec == deg
+        kv.free(0)
+        assert len(rs2) == 0                    # lifecycle follows the move
+
+    def test_paged_kv_migrate_rolls_back_on_failure(self):
+        from repro.launch.paged_kv import PagedKV
+        rs = ResidentSet(SPEC)
+        kv = PagedKV(spec=SPEC, n_blocks=4, block_tokens=4, kv_bits=8,
+                     resident_set=rs)
+        assert kv.alloc(0, 16)
+        deg = SPEC.disable_bank(0)
+        # target set too small: 4 blocks x 8 rows on ONE live bank = 32
+        # rows, but only 24 fit — the migration must fail atomically
+        rs_small = ResidentSet(deg, reserve_rows=40)
+        with pytest.raises(CimOpError):
+            kv.migrate(deg, rs_small)
+        assert len(rs_small) == 0               # staged claims rolled back
+        assert len(rs) == 4 and kv.spec == SPEC  # table untouched
+
+    def test_check_fits_respects_degraded_budget(self):
+        deg = ArraySpec(banks=2, subarrays=1, rows=64, bitline_words=32,
+                        disabled_banks=(0,))
+        assert deg.parallel_words == 32         # one live bank
+        plan = deg.plan(64)
+        assert plan.n_tiles == 2 and plan.waves == 2
+
+
+# ---------------------------------------------------------------------------
+# the shared seed convention with the training supervisor
+# ---------------------------------------------------------------------------
+
+
+class TestHostFailureHook:
+    def test_fires_at_scheduled_steps_once(self):
+        from repro.runtime.supervisor import SimulatedHostFailure
+        hook = faults.host_failure_hook(fail_steps=(2,))
+        hook(0)
+        hook(1)
+        with pytest.raises(SimulatedHostFailure):
+            hook(2)
+        hook(2)                                 # replay after restart: clean
+        hook(3)
+
+    def test_probabilistic_fires_deterministically(self):
+        from repro.runtime.supervisor import SimulatedHostFailure
+        failed = []
+        hook = faults.host_failure_hook(p_fail=0.5, seed=123)
+        for step in range(20):
+            try:
+                hook(step)
+            except SimulatedHostFailure:
+                failed.append(step)
+        assert failed                           # p=0.5 over 20 steps
+        # an identical campaign fails at exactly the same steps
+        failed2 = []
+        hook2 = faults.host_failure_hook(p_fail=0.5, seed=123)
+        for step in range(20):
+            try:
+                hook2(step)
+            except SimulatedHostFailure:
+                failed2.append(step)
+        assert failed == failed2
+
+    def test_seed_env_convention(self, monkeypatch):
+        monkeypatch.setenv(faults.ENV_SEED, "99")
+        from repro.runtime.supervisor import SimulatedHostFailure
+        hook = faults.host_failure_hook(p_fail=1.0)
+        with pytest.raises(SimulatedHostFailure, match="seed 99"):
+            hook(0)
+
+    def test_supervisor_recovers_from_hook(self, tmp_path):
+        """End-to-end: a Supervisor driven by the shared-seed hook restarts
+        through the injected failure and finishes the run — the hook fires
+        once, so the restart replay of the same step is clean."""
+        from repro.checkpoint import CheckpointManager
+        from repro.runtime.supervisor import Supervisor, SupervisorConfig
+
+        def step_fn(st, batch):
+            return {"step": st["step"] + 1,
+                    "value": st["value"] + batch}, {"loss": jnp.float32(1.0)}
+
+        hook = faults.host_failure_hook(fail_steps=(3,), seed=7)
+        sup = Supervisor(step_fn, lambda s: jnp.float32(1.0),
+                         CheckpointManager(str(tmp_path), keep=2),
+                         SupervisorConfig(ckpt_every=2, max_restarts=4),
+                         fault_hook=hook)
+        state0 = {"step": jnp.int32(0), "value": jnp.float32(0.0)}
+        final, _ = sup.run(state0, 6)
+        assert len(sup.events) == 1
+        assert int(final["step"]) == 6
+
+
+# ---------------------------------------------------------------------------
+# cost model: ECC overhead weighed by the offload policy
+# ---------------------------------------------------------------------------
+
+
+def test_ecc_overhead_ratio_scales_load_cost():
+    from repro.cim import cost
+    from repro.cim.trace import trace
+
+    def f(a, b):
+        return a + b
+
+    tr = trace(f, np.zeros(64, np.int16), np.ones(64, np.int16))
+    op = next(o for o in tr.ops if o.eligible and o.accesses > 0)
+    res = __import__("repro.cim.accounting",
+                     fromlist=["_SCHEMES"])._SCHEMES["current"](1024)
+    plain = cost.project_eqn(op, 0, None, res, cost.DEFAULT_DEVICE, "edp")
+    prot = cost.project_eqn(op, 0, None, res, cost.DEFAULT_DEVICE, "edp",
+                            ecc_overhead_ratio=cost.ecc_overhead(op.n_bits))
+    assert prot.load_words32 > plain.load_words32
+    assert prot.cim_energy > plain.cim_energy
+    assert cost.ecc_overhead(8) == pytest.approx(5 / 8)
+    assert cost.ecc_overhead(16) == pytest.approx(6 / 16)

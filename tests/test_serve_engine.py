@@ -176,6 +176,47 @@ def test_engine_single_token_requests(small_model):
     assert rep["decode_tokens"] == 0 and rep["decode_steps"] == 0
 
 
+def _cim_test_model(name="serve-chaos-test", resident=True):
+    from repro.configs.base import ArchConfig
+
+    cfg = ArchConfig(name=name, family="dense", n_layers=1,
+                     d_model=16, n_heads=4, n_kv_heads=2, head_dim=8,
+                     d_ff=32, vocab_size=64, dtype="float32",
+                     tensor_parallel=False, cim_mlp_bits=8,
+                     cim_attention_bits=8, cim_unroll_groups=True,
+                     cim_resident=resident)
+    model = build(cfg)
+    return model, model.init(jax.random.PRNGKey(1))
+
+
+def _fresh_cim():
+    from repro.cim import clear_schedule_cache
+    from repro.cim import cost as cost_mod
+    from repro.cim import faults, ledger
+    from repro.cim.array import clear_resident, set_current_spec
+    ledger().reset()
+    clear_resident()
+    clear_schedule_cache()
+    cost_mod.reset_plan_stats()
+    set_current_spec(None)
+    faults.uninstall()
+    faults.reset_fault_stats()
+
+
+def _serve_cim(model, params, *, reqs=2, gen=4, spec=None, **kw):
+    from repro.cim.array import DEFAULT_SPEC, resident_set
+    spec = spec or DEFAULT_SPEC
+    rs = resident_set(spec)
+    paged = PagedKV.for_model(model.cfg, spec=spec, slots=2,
+                              max_len=4 + gen, resident_set=rs)
+    engine = ServeEngine(model, params, slots=2, max_len=4 + gen,
+                         cim_lower=True, paged=paged, warmup_steps=0,
+                         spec=spec, **kw)
+    requests = [ServeRequest(rid=i, prompt_len=4, gen=gen)
+                for i in range(reqs)]
+    return engine.run(requests), requests, engine
+
+
 def test_engine_report_surfaces_offload_plan_stats():
     """With cim_lower the report carries the cost model's offload decision
     counters (repro.cim.cost.PLAN_STATS): plans were cut for the lowered
@@ -201,3 +242,179 @@ def test_engine_report_surfaces_offload_plan_stats():
     assert off["eqns_lowered"] > 0
     # unbanked placements always win the edp comparison: nothing demoted
     assert off["eqns_demoted"] == 0 and off["demoted_accesses"] == 0
+
+
+# ---------------------------------------------------------------------------
+# chaos: the self-healing serve loop under injected faults
+# ---------------------------------------------------------------------------
+
+
+class TestChaos:
+    def test_bit_exact_under_single_bit_resident_faults(self):
+        """Single-bit faults on ECC-protected resident planes: the served
+        tokens are bit-identical to the fault-free run, every error
+        corrected, zero uncorrected (the tentpole acceptance). BER is set
+        high enough that this tiny model's resident footprint sees flips."""
+        from repro.cim import faults
+        from repro.cim.array import set_resident_ecc
+
+        model, params = _cim_test_model()
+        _fresh_cim()
+        clean, _, _ = _serve_cim(model, params)
+        clean_ids = [r["token_ids"] for r in clean["per_request"]]
+
+        _fresh_cim()
+        set_resident_ecc(True)
+        try:
+            with faults.faults(faults.FaultConfig(
+                    seed=11, resident_ber=1e-3,
+                    raise_on_uncorrectable=True)) as fm:
+                chaos, _, _ = _serve_cim(model, params)
+        finally:
+            set_resident_ecc(False)
+            _fresh_cim()
+        assert [r["token_ids"] for r in chaos["per_request"]] == clean_ids
+        assert fm.injected > 0 and fm.corrected == fm.injected
+        assert fm.uncorrected == 0
+        assert chaos["faults"]["corrected"] > 0
+        assert chaos["faults"]["uncorrected"] == 0
+        assert chaos["faults"]["ecc_uncorrected"] == 0
+
+    def test_uncorrectable_triggers_repair_and_retry(self):
+        """A forced double-bit error raises mid-decode; the engine counts
+        a repair, re-pins from the host weights, retries the step, and the
+        output is STILL bit-identical to the fault-free run."""
+        from repro.cim import faults
+        from repro.cim.array import set_resident_ecc
+
+        model, params = _cim_test_model()
+        _fresh_cim()
+        clean, _, _ = _serve_cim(model, params)
+        clean_ids = [r["token_ids"] for r in clean["per_request"]]
+
+        _fresh_cim()
+        set_resident_ecc(True)
+        try:
+            with faults.faults(faults.FaultConfig(
+                    seed=0, uncorrectable_at_verify=(2,),
+                    raise_on_uncorrectable=True)) as fm:
+                chaos, _, engine = _serve_cim(model, params)
+        finally:
+            set_resident_ecc(False)
+            _fresh_cim()
+        assert engine.repairs >= 1
+        assert chaos["faults"]["repairs"] >= 1
+        assert fm.uncorrected >= 1              # detected, then repaired
+        assert [r["token_ids"] for r in chaos["per_request"]] == clean_ids
+
+    def test_retry_budget_exhaustion_raises(self):
+        from repro.cim import faults
+        from repro.cim.array import set_resident_ecc
+
+        model, params = _cim_test_model()
+        _fresh_cim()
+        set_resident_ecc(True)
+        try:
+            # every verify uncorrectable: the budget cannot save the step
+            with faults.faults(faults.FaultConfig(
+                    seed=0, uncorrectable_at_verify=tuple(range(200)),
+                    raise_on_uncorrectable=True)):
+                with pytest.raises(Exception):
+                    _serve_cim(model, params, retry_budget=1)
+        finally:
+            set_resident_ecc(False)
+            _fresh_cim()
+
+    def test_mid_run_bank_kill_completes_all_requests(self):
+        """One bank killed mid-run: the engine fails over (degraded spec,
+        paged KV migrated, weights re-pinned), every admitted request
+        completes, and the report shows the failover + zero uncorrected."""
+        from repro.cim import faults
+        from repro.cim.array import DEFAULT_SPEC, spec_override
+
+        model, params = _cim_test_model()
+        _fresh_cim()
+        try:
+            with faults.faults(faults.FaultConfig(
+                    seed=5, kill_bank_at=(2, 1))) as fm:
+                rep, requests, engine = _serve_cim(model, params, gen=6)
+        finally:
+            _fresh_cim()
+        assert fm.bank_kills == 1
+        assert engine.failovers == 1
+        assert engine.spec.disabled_banks == (1,)
+        assert engine.spec != DEFAULT_SPEC
+        assert spec_override() is None          # _fresh_cim restored it
+        for r in requests:
+            assert r.done and len(r.tokens) == r.gen
+        assert rep["completed"] == len(requests)
+        assert rep["shed"] == 0
+        assert rep["faults"]["failovers"] == 1
+        assert rep["faults"]["uncorrected"] == 0
+        assert rep["faults"]["ecc_uncorrected"] == 0
+        # KV reservations all live on surviving banks
+        assert 1 not in engine.paged.rs.rows_per_bank()
+
+    def test_bank_kill_tokens_match_healthy_run(self):
+        """Failover is value-transparent: the degraded-geometry run emits
+        the same tokens (remap is bit-exact; host demotion is bit-exact)."""
+        from repro.cim import faults
+
+        model, params = _cim_test_model()
+        _fresh_cim()
+        clean, _, _ = _serve_cim(model, params, gen=6)
+        clean_ids = [r["token_ids"] for r in clean["per_request"]]
+        _fresh_cim()
+        try:
+            with faults.faults(faults.FaultConfig(
+                    seed=5, kill_bank_at=(2, 0))):
+                chaos, _, _ = _serve_cim(model, params, gen=6)
+        finally:
+            _fresh_cim()
+        assert [r["token_ids"] for r in chaos["per_request"]] == clean_ids
+
+
+class TestAdmissionControl:
+    def test_timeout_sheds_stale_requests(self, small_model):
+        model, params = small_model
+        engine = ServeEngine(model, params, slots=1, max_len=7,
+                             warmup_steps=0, timeout_s=0.0)
+        # the second request is due immediately but can never be admitted
+        # within a 0-second wait while the first owns the only slot
+        reqs = [ServeRequest(rid=0, prompt_len=4, gen=3),
+                ServeRequest(rid=1, prompt_len=4, gen=3)]
+        rep = engine.run(reqs)
+        assert rep["shed"] == 1 and engine.shed_count == 1
+        assert reqs[1].shed and not reqs[1].tokens
+        assert reqs[0].done
+        assert rep["completed"] == 1
+        shed_reports = [r for r in rep["per_request"] if r["shed"]]
+        assert len(shed_reports) == 1 and shed_reports[0]["rid"] == 1
+
+    def test_queue_limit_sheds_excess_from_tail(self, small_model):
+        model, params = small_model
+        engine = ServeEngine(model, params, slots=1, max_len=7,
+                             warmup_steps=0, queue_limit=1)
+        reqs = [ServeRequest(rid=i, prompt_len=4, gen=3) for i in range(4)]
+        rep = engine.run(reqs)
+        # 1 admitted immediately + 1 queued; the rest shed from the tail
+        assert rep["shed"] == 2
+        assert sum(1 for r in reqs if r.done) == 2
+        assert reqs[3].shed                     # tail shed first
+
+    def test_all_shed_report_is_safe(self, small_model):
+        """Every request shed: the report builds without crashing, with
+        empty-sample percentiles at 0.0 (the _percentile guard end-to-end)
+        and decode_tokens pinned at 0, not negative. slots=0 models a
+        fully-failed engine draining its queue: nothing can ever be
+        admitted, so the 0-second timeout sheds every due request."""
+        model, params = small_model
+        engine = ServeEngine(model, params, slots=0, max_len=7,
+                             warmup_steps=0, queue_limit=0, timeout_s=0.0)
+        reqs = [ServeRequest(rid=i, prompt_len=4, gen=3) for i in range(3)]
+        rep = engine.run(reqs)
+        assert rep["shed"] == 3 and rep["completed"] == 0
+        assert rep["total_tokens"] == 0 and rep["decode_tokens"] == 0
+        assert rep["p50_ms"] == 0.0 and rep["p99_ms"] == 0.0
+        assert rep["tok_s_steady"] == 0.0
+        assert all(r["shed"] for r in rep["per_request"])
